@@ -1,0 +1,42 @@
+"""Fig 3b + Table II (accumulation) and Fig 8 + Table IV (persistence vs
+truncation reductions)."""
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import (PERSISTENCE, TRUNCATION, TABLE_I,
+                        simulate_queue_growth)
+
+SAMPLE_BYTES = 3072.0  # 3 KB per 32x32 CIFAR image (paper)
+
+
+def main():
+    # Table II: data accumulated for ResNet152 (t=1.2s) / VGG19 (t=1.6s)
+    for model, t_iter in (("resnet152", 1.2), ("vgg19", 1.6)):
+        for rate in (100, 600):
+            for T in (1_000, 10_000):
+                t0 = time.perf_counter()
+                q = simulate_queue_growth(t_iter, rate, 64, T, PERSISTENCE)
+                us = (time.perf_counter() - t0) * 1e6
+                gb = q[-1] * SAMPLE_BYTES / 1e9
+                emit(f"tab2_accum_{model}_S{rate}_T{T}", us,
+                     f"accum_gb={gb:.2f}")
+
+    # Table IV: persistence vs truncation reduction per distribution
+    rng = np.random.default_rng(0)
+    for name, dist in TABLE_I.items():
+        rates = dist.sample(rng, 16)
+        t0 = time.perf_counter()
+        pers = sum(simulate_queue_growth(1.2, r, 64, 2000, PERSISTENCE)[-1]
+                   for r in rates)
+        trun = sum(simulate_queue_growth(1.2, r, 64, 2000, TRUNCATION)[-1]
+                   for r in rates)
+        us = (time.perf_counter() - t0) * 1e6
+        emit(f"tab4_buffer_reduction_{name}", us,
+             f"persistence={pers:.0f};truncation={trun:.0f};"
+             f"reduction_x={pers/max(trun,1):.0f}")
+
+
+if __name__ == "__main__":
+    main()

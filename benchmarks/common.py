@@ -1,0 +1,91 @@
+"""Shared benchmark scaffolding: CSV emission + the small training setup used
+by the paper-reproduction benchmarks (MLP on class-clustered data, 8-16
+simulated edge devices — the CPU-scale stand-in for ResNet152/VGG19+CIFAR)."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ScaDLESConfig, ScaDLESTrainer
+from repro.data import ClassClusterData, DeviceDataSource
+
+ROWS: List[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    row = f"{name},{us_per_call:.2f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def timeit(fn: Callable, n: int = 5, warmup: int = 2) -> float:
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+_DATA = None
+
+
+def shared_data() -> ClassClusterData:
+    global _DATA
+    if _DATA is None:
+        _DATA = ClassClusterData(num_classes=10, train_per_class=192,
+                                 test_per_class=32, noise=0.8, seed=0)
+    return _DATA
+
+
+def make_mlp(d_in=32 * 32 * 3, hidden=64, classes=10):
+    def init(key):
+        k1, k2 = jax.random.split(key)
+        return {"w1": jax.random.normal(k1, (d_in, hidden)) * 0.02,
+                "b1": jnp.zeros(hidden),
+                "w2": jax.random.normal(k2, (hidden, classes)) * 0.02,
+                "b2": jnp.zeros(classes)}
+
+    def per_sample_loss(p, x, y):
+        h = jax.nn.relu(x.reshape(x.shape[0], -1) @ p["w1"] + p["b1"])
+        logits = h @ p["w2"] + p["b2"]
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
+        return lse - gold
+
+    def predict(p, x):
+        h = jax.nn.relu(x.reshape(x.shape[0], -1) @ p["w1"] + p["b1"])
+        return h @ p["w2"] + p["b2"]
+
+    return {"init": init, "per_sample_loss": per_sample_loss,
+            "predict": predict}
+
+
+def accuracy(model, params, data) -> float:
+    logits = model["predict"](params, jnp.asarray(data.test_x))
+    return float(np.mean(np.argmax(np.asarray(logits), -1) == data.test_y))
+
+
+def run_trainer(cfg: ScaDLESConfig, steps: int, iid=True,
+                labels_per_device=1, loss_target: float = 0.0) -> Dict:
+    data = shared_data()
+    model = make_mlp()
+    src = DeviceDataSource(data, cfg.n_devices, iid=iid,
+                           labels_per_device=labels_per_device)
+    tr = ScaDLESTrainer(model, src, cfg)
+    hist = tr.run(steps)
+    out = tr.summary()
+    out["acc"] = accuracy(model, tr.params, data)
+    out["trainer"] = tr
+    if loss_target > 0:
+        # simulated wall-clock when training loss first crosses the target —
+        # the paper's convergence-time metric (large batches take fewer,
+        # slower iterations; fixed-step wall-clock would be unfair)
+        t = next((h["sim_time_s"] for h in hist if h["loss"] < loss_target),
+                 None)
+        out["time_to_target"] = t if t is not None else float("inf")
+    return out

@@ -1,0 +1,26 @@
+"""Table V: adaptive compression — CNC ratio, accuracy, floats sent across
+(CR, delta) configurations."""
+import time
+
+from benchmarks.common import emit, run_trainer
+from repro.core import ScaDLESConfig
+
+STEPS = 25
+GRID = [(0.1, 0.1), (0.1, 0.2), (0.1, 0.3), (0.1, 0.4),
+        (0.01, 0.1), (0.01, 0.3), (0.01, 0.4)]
+
+
+def main():
+    for cr, delta in GRID:
+        t0 = time.perf_counter()
+        r = run_trainer(ScaDLESConfig(n_devices=16, dist="S1", weighted=True,
+                                      compression=(cr, delta), base_lr=0.05),
+                        STEPS)
+        us = (time.perf_counter() - t0) * 1e6
+        emit(f"tab5_compression_cr{cr}_d{delta}", us,
+             f"cnc={r['cnc_ratio']:.2f};acc={r['acc']:.3f};"
+             f"floats_sent={r['floats_sent']:.2e}")
+
+
+if __name__ == "__main__":
+    main()

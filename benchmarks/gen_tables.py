@@ -1,0 +1,69 @@
+"""Generate EXPERIMENTS.md §Dry-run/§Roofline markdown tables from artifacts."""
+import glob
+import json
+import os
+import sys
+
+
+def load(out_dir):
+    recs = {}
+    for p in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        r = json.load(open(p))
+        recs[(r["arch"], r["shape"], r["mesh"])] = r
+    return recs
+
+
+ARCHS = ["recurrentgemma-2b", "internlm2-20b", "mixtral-8x22b", "whisper-base",
+         "qwen2-0.5b", "qwen1.5-0.5b", "qwen2-vl-2b", "xlstm-125m",
+         "mistral-large-123b", "llama4-maverick-400b-a17b"]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def dryrun_table(recs, mesh):
+    lines = ["| arch | shape | n_micro | peak GB | wire GB/step | HLO TFLOP | compile s |",
+             "|---|---|---|---|---|---|---|"]
+    for a in ARCHS:
+        for s in SHAPES:
+            r = recs.get((a, s, mesh))
+            if not r:
+                lines.append(f"| {a} | {s} | - | MISSING | | | |")
+                continue
+            pk = r["memory"].get("peak_bytes_est", 0) / 1e9
+            wire = r["collective"].get("total_looped", 0) / 1e9
+            lines.append(
+                f"| {a} | {s} | {r.get('n_micro', 1)} | {pk:.1f} "
+                f"| {wire:.1f} | {r['flops_per_chip']/1e12:.2f} "
+                f"| {r.get('compile_s', 0):.0f} |")
+    return "\n".join(lines)
+
+
+def roofline_table(recs, mesh):
+    lines = ["| arch | shape | compute s | memory s | collective s | bottleneck | useful | what moves the dominant term |",
+             "|---|---|---|---|---|---|---|---|"]
+    hints = {
+        "compute": "more chips per token (smaller per-chip batch) or MXU-denser kernels",
+        "memory": "Pallas flash/fused kernels keep scores+gates in VMEM; larger microbatches amortise weight reads",
+        "collective": "fewer microbatches (less FSDP regather), bf16 wire, overlap collectives with compute",
+    }
+    for a in ARCHS:
+        for s in SHAPES:
+            r = recs.get((a, s, mesh))
+            if not r:
+                continue
+            t = r["roofline"]
+            lines.append(
+                f"| {a} | {s} | {t['compute_s']:.3f} | {t['memory_s']:.3f} "
+                f"| {t['collective_s']:.3f} | {t['bottleneck']} "
+                f"| {r['useful_flops_ratio']:.2f} "
+                f"| {hints[t['bottleneck']]} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    recs = load(sys.argv[1] if len(sys.argv) > 1 else "artifacts/dryrun")
+    for mesh in ("16x16", "2x16x16"):
+        n = sum(1 for k in recs if k[2] == mesh)
+        print(f"\n## mesh {mesh} ({n} combos)\n")
+        print(dryrun_table(recs, mesh))
+        print()
+        print(roofline_table(recs, mesh))

@@ -1,0 +1,41 @@
+"""Kernel microbenchmarks: block-top-k sparsification vs exact global top-k.
+
+Wall-times here are CPU (interpret-mode pallas is a correctness path, not a
+perf path), so the perf-relevant derived numbers are algorithmic: energy
+retention vs exact top-k and the achieved density.
+"""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+from repro.core.compression import sparsify_mask
+from repro.kernels import ops
+from repro.kernels.ref import block_topk_ref
+
+
+def main():
+    n = 1 << 20  # ~1M grads (ResNet-scale slice)
+    flat = jax.random.normal(jax.random.PRNGKey(0), (n,))
+    for cr in (0.1, 0.01):
+        k = int(cr * n)
+        block_fn = jax.jit(lambda f: ops.block_topk_sparsify(f, cr))
+        glob_fn = jax.jit(lambda f: sparsify_mask(f, k))
+        us_b = timeit(lambda: jax.block_until_ready(block_fn(flat)), n=3)
+        us_g = timeit(lambda: jax.block_until_ready(glob_fn(flat)), n=3)
+        sp = block_fn(flat)
+        gl = glob_fn(flat)
+        ret = float(jnp.sum(sp * sp) / jnp.sum(gl * gl))
+        emit(f"kernel_block_topk_cr{cr}", us_b,
+             f"retention_vs_global={ret:.4f};global_topk_us={us_g:.0f}")
+
+    # fused sgdm: one-pass update vs three-pass jnp
+    p = jax.random.normal(jax.random.PRNGKey(1), (n,))
+    m = jnp.zeros(n)
+    g = jax.random.normal(jax.random.PRNGKey(2), (n,))
+    fused = jax.jit(lambda p, m, g: ops.fused_sgdm_flat(p, m, g, 0.1))
+    us = timeit(lambda: jax.block_until_ready(fused(p, m, g)), n=3)
+    emit("kernel_fused_sgdm_1m", us, "mode=interpret(cpu-correctness)")
+
+
+if __name__ == "__main__":
+    main()

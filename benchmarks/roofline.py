@@ -1,0 +1,42 @@
+"""Roofline table from the dry-run artifacts (deliverable g).
+
+Reads artifacts/dryrun/*.json and emits one row per (arch x shape x mesh):
+the three roofline terms, the bottleneck, per-chip peak memory, and the
+MODEL_FLOPS/HLO_FLOPS ratio.  EXPERIMENTS.md §Roofline is generated from this.
+"""
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+
+def load_all(out_dir="artifacts/dryrun"):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def main():
+    recs = load_all()
+    if not recs:
+        emit("roofline_missing", 0.0, "run repro.launch.sweep first")
+        return
+    for r in recs:
+        t = r["roofline"]
+        emit(f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}",
+             r.get("compile_s", 0.0) * 1e6,
+             f"compute_s={t['compute_s']:.4f};memory_s={t['memory_s']:.4f};"
+             f"collective_s={t['collective_s']:.4f};bn={t['bottleneck']};"
+             f"peak_gb={r['memory'].get('peak_bytes_est', 0)/1e9:.2f};"
+             f"useful={r['useful_flops_ratio']:.3f};nmicro={r.get('n_micro', 1)}")
+    n_fit = sum(1 for r in recs
+                if r["memory"].get("peak_bytes_est", 0) <= 16e9)
+    emit("roofline_summary", 0.0,
+         f"combos={len(recs)};fit_16gb={n_fit}")
+
+
+if __name__ == "__main__":
+    main()

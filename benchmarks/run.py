@@ -1,0 +1,37 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+import sys
+import traceback
+
+from benchmarks import (buffer_growth, compression, compression_wire,
+                        injection, kernels_bench, overall, roofline,
+                        streaming_latency, weighted_agg)
+
+MODULES = [
+    ("fig1_streaming_latency", streaming_latency),
+    ("tab2/4_buffer_growth", buffer_growth),
+    ("fig7_weighted_agg", weighted_agg),
+    ("fig9/10_injection", injection),
+    ("tab5_compression", compression),
+    ("tab6_overall", overall),
+    ("kernels", kernels_bench),
+    ("compression_wire", compression_wire),
+    ("roofline", roofline),
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in MODULES:
+        try:
+            mod.main()
+        except Exception:
+            failures += 1
+            print(f"{name},0.0,ERROR", file=sys.stderr)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Fig 1: streaming latency to gather a mini-batch per Table I distribution."""
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import TABLE_I, streaming_latency
+
+
+def main():
+    rng = np.random.default_rng(0)
+    for name, dist in TABLE_I.items():
+        rates = dist.sample(rng, 16)
+        for batch in (64, 256, 1024):
+            t0 = time.perf_counter()
+            lat = streaming_latency(rates, batch)
+            us = (time.perf_counter() - t0) * 1e6
+            emit(f"fig1_latency_{name}_b{batch}", us,
+                 f"max_wait_s={lat.max():.1f};mean_wait_s={lat.mean():.1f}")
+
+
+if __name__ == "__main__":
+    main()

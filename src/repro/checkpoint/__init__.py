@@ -1,0 +1,1 @@
+from repro.checkpoint.ckpt import restore_pytree, save_pytree  # noqa: F401

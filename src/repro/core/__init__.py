@@ -1,0 +1,21 @@
+# ScaDLES core: the paper's primary contribution as composable modules.
+from repro.core.buffer import (  # noqa: F401
+    PERSISTENCE, TRUNCATION, CountingBuffer, SampleBuffer, queue_size_eqn2,
+    queue_size_eqn3, simulate_queue_growth,
+)
+from repro.core.compression import (  # noqa: F401
+    AdaptiveCompressor, EWMA, energy_gap, flatten_grads,
+    flatten_stacked_grads, global_topk, sparsify_mask,
+)
+from repro.core.injection import (  # noqa: F401
+    inject_batches, injection_overhead_bytes, injection_plan,
+)
+from repro.core.scadles import ScaDLESConfig, ScaDLESTrainer  # noqa: F401
+from repro.core.simclock import EdgeClock, EdgeClockConfig  # noqa: F401
+from repro.core.streams import (  # noqa: F401
+    TABLE_I, StreamDist, StreamSimulator, streaming_latency,
+)
+from repro.core.weighted_agg import (  # noqa: F401
+    clip_batch, linear_scaled_lr, psum_weighted, rate_weights,
+    weighted_aggregate,
+)

@@ -1,0 +1,93 @@
+"""Stream buffers: Persistence vs Truncation policies (paper §IV, Eqn 2/3).
+
+``CountingBuffer`` tracks queue sizes analytically (Fig 3b / Fig 8 / Table IV);
+``SampleBuffer`` holds actual sample indices for the training loop.  Both share
+policy semantics:
+
+* persistence — every streamed sample is retained until consumed:
+      Q_i(T) = (t_i * S_i - b_i) * T + S_i          (Eqn 2, grows O(S T))
+* truncation  — after each iteration only the newest ~S_i samples survive:
+      Q_i(T) = S_i                                   (O(S))
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Deque, List, Optional
+
+import numpy as np
+
+PERSISTENCE = "persistence"
+TRUNCATION = "truncation"
+
+
+def queue_size_eqn2(t_iter: float, rate: float, batch: float, T: int) -> float:
+    """Accumulated samples after T steps (Eqn 2), valid for t*S >= b."""
+    return max(0.0, (t_iter * rate - batch)) * T + rate
+
+
+def queue_size_eqn3(t_iter: float, rate: float, T: int) -> float:
+    """High-rate limit (Eqn 3): Q = T t S + S when t*S >> b."""
+    return T * t_iter * rate + rate
+
+
+@dataclasses.dataclass
+class CountingBuffer:
+    policy: str = PERSISTENCE
+    size: float = 0.0
+    peak: float = 0.0
+    total_streamed: float = 0.0
+    total_dropped: float = 0.0
+
+    def step(self, streamed: float, consumed: float) -> float:
+        """One iteration: ``streamed`` samples arrive, ``consumed`` trained on."""
+        self.total_streamed += streamed
+        self.size = max(0.0, self.size + streamed - consumed)
+        if self.policy == TRUNCATION and self.size > streamed:
+            self.total_dropped += self.size - streamed
+            self.size = streamed
+        self.peak = max(self.peak, self.size)
+        return self.size
+
+
+class SampleBuffer:
+    """FIFO of sample ids (ints into the device-local stream ordering)."""
+
+    def __init__(self, policy: str = PERSISTENCE):
+        self.policy = policy
+        self._q: Deque[int] = collections.deque()
+        self._next_id = 0
+        self.peak = 0
+        self.total_dropped = 0
+
+    def stream_in(self, n: int) -> None:
+        for _ in range(int(n)):
+            self._q.append(self._next_id)
+            self._next_id += 1
+        if self.policy == TRUNCATION and len(self._q) > n:
+            drop = len(self._q) - int(n)
+            for _ in range(drop):
+                self._q.popleft()
+            self.total_dropped += drop
+        self.peak = max(self.peak, len(self._q))
+
+    def take(self, n: int) -> List[int]:
+        out = []
+        for _ in range(min(int(n), len(self._q))):
+            out.append(self._q.popleft())
+        return out
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+
+def simulate_queue_growth(t_iter: float, rate: float, batch: float, steps: int,
+                          policy: str = PERSISTENCE) -> np.ndarray:
+    """Queue-size trajectory; one 'timestep' = one training iteration, during
+    which ``t_iter * rate`` samples arrive (plus the initial burst S)."""
+    buf = CountingBuffer(policy=policy)
+    buf.step(rate, 0.0)          # ts=0 burst
+    sizes = []
+    for _ in range(steps):
+        sizes.append(buf.step(t_iter * rate, min(batch, buf.size + t_iter * rate)))
+    return np.asarray(sizes)

@@ -1,0 +1,162 @@
+"""Adaptive Top-k gradient compression (paper §IV "High communication cost").
+
+The rule: send Topk(g) iff the *energy gap*
+
+    gap(g) = ( ||g||^2 - ||Topk(g)||^2 ) / ||g||^2        in [0, 1]
+
+(tracked with an EWMA over iterations to follow critical learning regions
+[Accordion/critical-periods]) is <= delta; otherwise send dense g.  CNC ratio
+= fraction of iterations that used the compressed path.
+
+Top-k comes in two flavours:
+* ``global_topk`` — exact top-k over the flat gradient (paper semantics; used
+  in the convergence experiments);
+* ``block_topk`` — TPU-native block-local top-k (``repro.kernels``): the flat
+  gradient is tiled into lane-aligned blocks, each keeping its proportional
+  share of survivors.  This is the deployable kernel path (DESIGN.md §6).
+
+The mesh trainer uses a *two-program* strategy: compressed-collective and
+dense-collective step functions are compiled once each, and the (host-level)
+EWMA decision picks which to run next iteration — so the wire bytes really
+change, visible in the HLO collective roofline term.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def flatten_grads(grads) -> Tuple[jnp.ndarray, Callable]:
+    leaves, treedef = jax.tree.flatten(grads)
+    shapes = [l.shape for l in leaves]
+    sizes = [int(l.size) for l in leaves]
+    flat = jnp.concatenate([l.reshape(-1).astype(jnp.float32) for l in leaves])
+
+    def unflatten(v):
+        out, off = [], 0
+        for sh, sz in zip(shapes, sizes):
+            out.append(v[off:off + sz].reshape(sh))
+            off += sz
+        return jax.tree.unflatten(treedef, out)
+
+    return flat, unflatten
+
+
+def flatten_stacked_grads(grads) -> Tuple[jnp.ndarray, Callable]:
+    """Grads with a leading device axis -> (D, n) flat matrix + unflatten
+    that maps a single (n,) vector back to one device's gradient pytree."""
+    leaves, treedef = jax.tree.flatten(grads)
+    shapes = [l.shape[1:] for l in leaves]
+    sizes = [int(np.prod(s)) if s else 1 for s in shapes]
+    flat = jnp.concatenate(
+        [l.reshape(l.shape[0], -1).astype(jnp.float32) for l in leaves], axis=1)
+
+    def unflatten_one(v):
+        out, off = [], 0
+        for sh, sz in zip(shapes, sizes):
+            out.append(v[off:off + sz].reshape(sh))
+            off += sz
+        return jax.tree.unflatten(treedef, out)
+
+    return flat, unflatten_one
+
+
+def global_topk(flat: jnp.ndarray, k: int):
+    """Exact top-k by magnitude -> (values, indices); k static."""
+    mag = jnp.abs(flat)
+    _, idx = jax.lax.top_k(mag, k)
+    return flat[idx], idx
+
+
+def densify(values, indices, n: int):
+    return jnp.zeros((n,), values.dtype).at[indices].set(values)
+
+
+def sparsify_mask(flat: jnp.ndarray, k: int):
+    """Dense tensor with all but the top-k entries zeroed."""
+    v, i = global_topk(flat, k)
+    return densify(v, i, flat.shape[0])
+
+
+def energy_gap(flat: jnp.ndarray, compressed: jnp.ndarray):
+    """( |g|^2 - |Topk(g)|^2 ) / |g|^2; compressed is the densified top-k."""
+    e_full = jnp.sum(jnp.square(flat))
+    e_comp = jnp.sum(jnp.square(compressed))
+    return jnp.abs(e_full - e_comp) / jnp.maximum(e_full, 1e-30)
+
+
+@dataclasses.dataclass
+class EWMA:
+    """Exponentially weighted moving average of the energy gap."""
+    alpha: float = 0.1
+    value: float = 1.0     # start pessimistic: first iters send dense
+    initialized: bool = False
+
+    def update(self, x: float) -> float:
+        x = float(x)
+        if not self.initialized:
+            self.value, self.initialized = x, True
+        else:
+            self.value = self.alpha * x + (1 - self.alpha) * self.value
+        return self.value
+
+
+@dataclasses.dataclass
+class AdaptiveCompressor:
+    """Host-side controller implementing the paper's communication rule."""
+    cr: float = 0.1          # compression ratio (k = cr * n)
+    delta: float = 0.3       # gap threshold
+    alpha: float = 0.1       # EWMA smoothing
+    use_block_topk: bool = False
+    block_size: int = 1024
+
+    def __post_init__(self):
+        self.ewma = EWMA(alpha=self.alpha)
+        self.t_compressed = 0
+        self.t_uncompressed = 0
+        self.floats_sent = 0.0
+
+    def k_for(self, n: int) -> int:
+        return max(1, int(self.cr * n))
+
+    def compress(self, flat: jnp.ndarray):
+        n = flat.shape[0]
+        k = self.k_for(n)
+        if self.use_block_topk:
+            from repro.kernels import ops as kops
+            comp = kops.block_topk_sparsify(flat, self.cr,
+                                            block_size=self.block_size)
+        else:
+            comp = sparsify_mask(flat, k)
+        return comp
+
+    def decide(self, gap: float) -> bool:
+        """EWMA-update the gap and return True if compression is allowed."""
+        return self.ewma.update(gap) <= self.delta
+
+    def account(self, used_compressed: bool, n: int) -> None:
+        k = self.k_for(n)
+        if used_compressed:
+            self.t_compressed += 1
+            # k values + k int32 indices on the wire
+            self.floats_sent += 2 * k
+        else:
+            self.t_uncompressed += 1
+            self.floats_sent += n
+
+    @property
+    def cnc_ratio(self) -> float:
+        tot = self.t_compressed + self.t_uncompressed
+        return self.t_compressed / tot if tot else 0.0
+
+    def step(self, flat: jnp.ndarray):
+        """Full per-iteration rule: returns (tensor-to-send, used_compressed)."""
+        comp = self.compress(flat)
+        gap = float(energy_gap(flat, comp))
+        use = self.decide(gap)
+        self.account(use, flat.shape[0])
+        return (comp if use else flat), use

@@ -1,0 +1,228 @@
+"""ScaDLES trainer: the paper's full per-iteration routine (Fig 5).
+
+Simulates N edge devices (vmap over a device axis — bit-exact synchronous
+data-parallel semantics) with:
+
+  streams -> buffers (persistence|truncation) -> rate-proportional batches ->
+  [data injection] -> per-device grads -> [adaptive compression] ->
+  weighted aggregation (Eqn 4) -> linear-scaled SGD -> simulated edge clock.
+
+``weighted=False`` gives the conventional-DDL baseline (fixed batch, uniform
+mean, full waits) the paper compares against.  This engine powers the
+paper-validation benchmarks; the mesh-distributed trainer in ``repro.train``
+integrates the same mechanisms into shard_map for the architecture zoo.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import buffer as buf_lib
+from repro.core import compression as comp_lib
+from repro.core import injection as inj_lib
+from repro.core import simclock
+from repro.core import streams as stream_lib
+from repro.core.weighted_agg import (clip_batch, linear_scaled_lr,
+                                     rate_weights, weighted_aggregate)
+
+
+@dataclasses.dataclass
+class ScaDLESConfig:
+    n_devices: int = 16
+    dist: str = "S1"                     # Table I key
+    policy: str = buf_lib.PERSISTENCE
+    weighted: bool = True                # False => conventional DDL
+    ddl_batch: int = 64                  # fixed batch for conventional DDL
+    b_min: int = 8
+    b_max: int = 1024
+    base_lr: float = 0.05
+    momentum: float = 0.9
+    weight_decay: float = 0.0
+    linear_lr_scaling: bool = True
+    compression: Optional[Tuple[float, float]] = None   # (CR, delta)
+    injection: Optional[Tuple[float, float]] = None     # (alpha, beta)
+    # local SGD steps between synchronisations (1 = per-iteration sync, the
+    # paper's main setting; >1 = FedAvg-style partial work, where non-IID
+    # weight divergence [Zhao et al.] becomes visible at MLP scale and the
+    # data-injection rescue is measurable on CPU — DESIGN.md §8)
+    local_steps: int = 1
+    seed: int = 0
+    intra_jitter: float = 0.0
+    sample_bytes: int = 3072             # 3 KB / CIFAR image (paper Fig 10)
+    grad_floats: Optional[float] = None  # default: model size
+    compute_sec_per_iter: float = 1.2    # K80 calibration (Table II)
+    bandwidth_gbps: float = 5.0
+
+
+class ScaDLESTrainer:
+    """model: dict with init(key), per_sample_loss(params,x,y)->(b,),
+    predict(params,x)->logits.  data: DeviceDataSource (repro.data)."""
+
+    def __init__(self, model, data, cfg: ScaDLESConfig):
+        self.model, self.data, self.cfg = model, data, cfg
+        self.rng = np.random.default_rng(cfg.seed)
+        self.sim = stream_lib.StreamSimulator(
+            stream_lib.TABLE_I[cfg.dist], cfg.n_devices, seed=cfg.seed,
+            intra_jitter=cfg.intra_jitter)
+        self.buffers = [buf_lib.CountingBuffer(policy=cfg.policy)
+                        for _ in range(cfg.n_devices)]
+        self.params = model["init"](jax.random.PRNGKey(cfg.seed))
+        self.momentum_state = jax.tree.map(jnp.zeros_like, self.params)
+        actual_floats = sum(x.size for x in jax.tree.leaves(self.params))
+        # wire-model size (clock + floats accounting) may be calibrated to a
+        # larger reference model (e.g. ResNet152's 60.2M) while the actual
+        # trained model stays CPU-sized; compression k uses the actual size
+        n_floats = cfg.grad_floats or actual_floats
+        self.compressor = (comp_lib.AdaptiveCompressor(*cfg.compression)
+                           if cfg.compression else None)
+        self.clock = simclock.EdgeClock(simclock.EdgeClockConfig(
+            bandwidth_gbps=cfg.bandwidth_gbps,
+            compute_sec_per_iter=cfg.compute_sec_per_iter,
+            n_devices=cfg.n_devices, grad_floats=n_floats))
+        self.n_floats = int(n_floats)
+        self.actual_floats = int(actual_floats)
+        self.prev_iter_time = 1.0
+        self.history: List[Dict[str, float]] = []
+        self._step_fn = self._build_step()
+
+    # ------------------------------------------------------------------
+    def _build_step(self):
+        cfg = self.cfg
+        per_sample_loss = self.model["per_sample_loss"]
+        k = self.compressor.k_for(self.actual_floats) if self.compressor else 1
+
+        def device_grad(params, x, y, mask):
+            def loss(p):
+                per = per_sample_loss(p, x, y)
+                return jnp.sum(per * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+            if cfg.local_steps <= 1:
+                return jax.value_and_grad(loss)(params)
+
+            # FedAvg-style partial work: E local SGD steps, the parameter
+            # delta acts as the device's pseudo-gradient for aggregation
+            def one(p, _):
+                l, g = jax.value_and_grad(loss)(p)
+                p = jax.tree.map(lambda a, b: a - cfg.base_lr * b, p, g)
+                return p, l
+            p_new, losses = jax.lax.scan(one, params, None,
+                                         length=cfg.local_steps)
+            pseudo_grad = jax.tree.map(
+                lambda a, b: (a - b) / cfg.base_lr, params, p_new)
+            return jnp.mean(losses), pseudo_grad
+
+        @jax.jit
+        def step(params, mom, xs, ys, masks, rates, use_comp):
+            # per-device grads (vmap == synchronous DDP)
+            losses, grads = jax.vmap(device_grad, in_axes=(None, 0, 0, 0))(
+                params, xs, ys, masks)
+            # optional compression of each device's gradient
+            flat, unflatten = comp_lib.flatten_stacked_grads(grads)  # (D, n)
+            if cfg.compression:
+                comp = jax.vmap(
+                    lambda v: comp_lib.sparsify_mask(v, k))(flat)
+                gap = jnp.mean(jax.vmap(comp_lib.energy_gap)(flat, comp))
+                flat_used = jnp.where(use_comp, comp, flat)
+            else:
+                gap = jnp.zeros(())
+                flat_used = flat
+            grads = jax.vmap(unflatten)(flat_used)
+            # aggregation: Eqn 4b (weighted) or uniform mean (DDL)
+            if cfg.weighted:
+                g = weighted_aggregate(grads, rates)
+            else:
+                g = jax.tree.map(lambda x: jnp.mean(x, axis=0), grads)
+            # linear LR scaling
+            if cfg.weighted and cfg.linear_lr_scaling:
+                lr = linear_scaled_lr(cfg.base_lr, rates,
+                                      cfg.ddl_batch * cfg.n_devices)
+            else:
+                lr = jnp.asarray(cfg.base_lr)
+            # momentum SGD
+            def upd(m, gg, p):
+                m2 = cfg.momentum * m + gg + cfg.weight_decay * p
+                return m2, p - lr * m2
+            flat_m, tdef = jax.tree.flatten(mom)
+            flat_g = jax.tree.leaves(g)
+            flat_p = jax.tree.leaves(params)
+            new = [upd(m, gg.astype(m.dtype), p)
+                   for m, gg, p in zip(flat_m, flat_g, flat_p)]
+            mom = jax.tree.unflatten(tdef, [x[0] for x in new])
+            params = jax.tree.unflatten(tdef, [x[1] for x in new])
+            return params, mom, jnp.mean(losses), gap
+
+        return step
+
+    # ------------------------------------------------------------------
+    def run(self, steps: int, eval_every: int = 0,
+            eval_fn: Optional[Callable] = None) -> List[Dict[str, float]]:
+        cfg = self.cfg
+        for t in range(steps):
+            rates = self.sim.rates_at(t)
+            # batch sizes + streaming waits
+            if cfg.weighted:
+                batches = np.clip(rates, cfg.b_min, cfg.b_max)
+                wait = 0.0
+            else:
+                batches = np.full(cfg.n_devices, cfg.ddl_batch)
+                queues = np.array([b.size for b in self.buffers])
+                wait = simclock.ddl_streaming_wait(rates, queues, cfg.ddl_batch)
+            # stream in: arrivals during previous iteration (+ wait time)
+            arriving = rates * max(self.prev_iter_time + wait, 1.0)
+            for i, b in enumerate(self.buffers):
+                b.step(float(arriving[i]), float(batches[i]))
+            # draw fixed-shape batches with masks
+            xs, ys, masks = self.data.batches(self.rng, batches, cfg.b_max)
+            inj_bytes = 0
+            if cfg.injection:
+                alpha, beta = cfg.injection
+                senders, n_share = inj_lib.injection_plan(
+                    self.rng, cfg.n_devices, alpha, beta,
+                    int(np.min(np.maximum(batches, 1))))
+                xs, ys, inj_bytes = inj_lib.inject_batches(
+                    self.rng, xs, ys, senders, n_share)
+            # compression decision from last EWMA state (host-level, synced)
+            use_comp = bool(self.compressor and
+                            self.compressor.ewma.value <= self.compressor.delta
+                            and self.compressor.ewma.initialized)
+            self.params, self.momentum_state, loss, gap = self._step_fn(
+                self.params, self.momentum_state, jnp.asarray(xs),
+                jnp.asarray(ys), jnp.asarray(masks, jnp.float32),
+                jnp.asarray(rates, jnp.float32), use_comp)
+            if self.compressor:
+                k = self.compressor.k_for(self.n_floats)
+                self.compressor.decide(float(gap))     # EWMA update
+                self.compressor.account(use_comp, self.n_floats)
+                floats_wire = (2 * k if use_comp else self.n_floats)
+            else:
+                floats_wire = self.n_floats
+            dt = self.clock.step(wait_s=wait,
+                                 local_batch=float(np.mean(batches)),
+                                 floats_on_wire=floats_wire,
+                                 extra_bytes=inj_bytes)
+            self.prev_iter_time = dt - wait
+            rec = {"step": t, "loss": float(loss), "sim_time_s": self.clock.time_s,
+                   "wait_s": wait, "global_batch": float(np.sum(batches)),
+                   "buffer_total": float(sum(b.size for b in self.buffers)),
+                   "gap": float(gap), "used_comp": float(use_comp),
+                   "floats_wire": float(floats_wire), "inj_bytes": float(inj_bytes)}
+            if eval_every and eval_fn and (t + 1) % eval_every == 0:
+                rec.update(eval_fn(self.params))
+            self.history.append(rec)
+        return self.history
+
+    # summary metrics ---------------------------------------------------
+    def summary(self) -> Dict[str, float]:
+        out = {
+            "sim_time_s": self.clock.time_s,
+            "buffer_peak": float(sum(b.peak for b in self.buffers)),
+            "buffer_final": float(sum(b.size for b in self.buffers)),
+        }
+        if self.compressor:
+            out["cnc_ratio"] = self.compressor.cnc_ratio
+            out["floats_sent"] = self.compressor.floats_sent * self.cfg.n_devices
+        return out

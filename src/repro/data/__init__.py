@@ -1,0 +1,3 @@
+from repro.data.synthetic import (  # noqa: F401
+    ClassClusterData, DeviceDataSource, TokenData, label_skew_partition,
+)

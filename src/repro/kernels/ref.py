@@ -1,0 +1,34 @@
+"""Pure-jnp oracles for the Pallas kernels (same math, no pallas_call)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.block_topk import N_BISECT, _bisect_threshold
+
+
+def block_topk_ref(g2d: jnp.ndarray, k: int):
+    """Oracle for kernels.block_topk: identical bisection semantics."""
+    mag = jnp.abs(g2d.astype(jnp.float32))
+    tau = _bisect_threshold(mag, k)
+    keep = mag >= tau
+    out = jnp.where(keep, g2d, jnp.zeros_like(g2d))
+    cnt = jnp.sum(keep.astype(jnp.int32), axis=-1, keepdims=True)
+    return out, cnt
+
+
+def exact_block_topk_ref(g2d: jnp.ndarray, k: int):
+    """Exact per-block top-k (sort-based) — retention upper bound for tests."""
+    mag = jnp.abs(g2d)
+    _, idx = jax.lax.top_k(mag, k)
+    mask = jnp.zeros_like(mag, jnp.bool_)
+    mask = jax.vmap(lambda m, i: m.at[i].set(True))(mask, idx)
+    return jnp.where(mask, g2d, jnp.zeros_like(g2d))
+
+
+def fused_sgdm_ref(p2d, m2d, g2d, lr, momentum: float = 0.9,
+                   weight_decay: float = 0.0):
+    p = p2d.astype(jnp.float32)
+    g = g2d.astype(jnp.float32) + weight_decay * p
+    m2 = momentum * m2d + g
+    return (p - lr * m2).astype(p2d.dtype), m2

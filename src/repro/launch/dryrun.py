@@ -1,0 +1,278 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh) and
+extract roofline inputs — no arrays are ever allocated (ShapeDtypeStructs).
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-0.5b \
+        --shape train_4k [--multi-pod] [--out artifacts/dryrun]
+
+Writes one JSON artifact per combination with memory analysis, HLO flops /
+bytes, parsed collective wire bytes, and the three roofline terms.
+"""  # noqa: E402
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, get_shape
+from repro.configs.base import InputShape, ModelConfig
+from repro.dist import hlo_analysis, hlo_cost
+from repro.dist.sharding import (attn_mode_for, batch_specs, cache_specs,
+                                 make_plan, make_run_ctx, named, param_specs)
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import decode_inputs, train_batch_specs
+from repro.models.decode import decode_step
+from repro.models.transformer import init_params
+from repro.optim.optimizers import sgdm_init, sgdm_update
+from repro.train.step import make_train_step
+
+
+def pick_n_micro(cfg: ModelConfig, shape: InputShape, plan,
+                 act_budget_bytes: float = 4e9) -> int:
+    """Gradient-accumulation factor so remat activation carries fit HBM.
+
+    Per-chip live carry = L * (B/dp) * s * d * 2 / tp bytes (bf16 x per
+    layer; the inter-block residual stack is sequence-sharded over TP —
+    DESIGN.md §5).  Every extra microbatch re-gathers FSDP weights and
+    reduce-scatters grads once more, so n_micro is the memory/collective
+    trade-off knob: pick the smallest value that fits.
+    """
+    if shape.kind != "train":
+        return 1
+    dp = plan.dp_size
+    b_local = max(shape.global_batch // dp, 1)
+    seq_shard = plan.tp_size if shape.seq_len % plan.tp_size == 0 else 1
+    carry = (cfg.num_layers * b_local * shape.seq_len * cfg.d_model * 2.0
+             / seq_shard)
+    # fp32 stacks can appear next to the bf16 ones (XLA hoists the bwd
+    # upcast across the residual stack), so budget for 3x; MoE adds
+    # dispatched-copy transients ~ tokens*topk*cf*d per layer backward;
+    # hybrid/context archs add CP all-gathered KV + fp32 scan transients
+    if cfg.moe is not None:
+        carry *= 6.0       # dispatched-copy transients
+    elif cfg.family in ("hybrid", "ssm"):
+        carry *= 8.0       # CP-gathered KV + fp32 recurrent-scan transients
+    else:
+        carry *= 3.0
+    n = 1
+    while (carry / n > act_budget_bytes
+           and n < shape.global_batch // dp
+           and (shape.global_batch // (n * 2)) % dp == 0):
+        n *= 2
+    return n
+
+
+def _ctx_knobs(cfg: ModelConfig, shape: InputShape, plan) -> Dict[str, Any]:
+    mode = attn_mode_for(cfg, plan)
+    s = shape.seq_len
+    if shape.kind == "prefill":
+        chunk = 1024   # fp32 score tile = b_loc*h_loc*chunk^2*4B, keep <~1GB
+    else:
+        chunk = 512
+    loss_chunk = min(512, s)
+    if mode == "context":   # keep loss chunks aligned with sequence shards
+        loss_chunk = max(s // plan.tp_size, 1)
+    return dict(chunk_q=chunk, chunk_k=chunk, loss_chunk=loss_chunk)
+
+
+def lower_one(arch: str, shape_name: str, multi_pod: bool,
+              n_micro_override: int = 0, grad_wire_bf16: bool = False,
+              bf16_momentum: bool = False):
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    plan = make_plan(mesh)
+    ctx = make_run_ctx(cfg, plan, **_ctx_knobs(cfg, shape, plan))
+
+    params_sds = jax.eval_shape(
+        lambda k: init_params(k, cfg, dtype=jnp.bfloat16), jax.random.PRNGKey(0))
+    p_specs = param_specs(params_sds, cfg, plan)
+    p_shard = named(params_sds, p_specs, mesh)
+
+    if shape.kind in ("train", "prefill"):
+        batch = train_batch_specs(cfg, shape, weighted=True)
+        b_specs = batch_specs(cfg, plan, batch, seq_sharded=ctx.seq_sharded)
+        b_shard = named(batch, b_specs, mesh)
+        if shape.kind == "train":
+            mom_dt = jnp.bfloat16 if bf16_momentum else jnp.float32
+            opt_sds = jax.eval_shape(
+                lambda p: sgdm_init(p, mom_dtype=mom_dt), params_sds)
+            o_specs = param_specs(opt_sds["mom"], cfg, plan)
+            o_shard = {"mom": named(opt_sds["mom"], o_specs, mesh)}
+            n_micro = n_micro_override or pick_n_micro(cfg, shape, plan)
+            step = make_train_step(
+                cfg, ctx,
+                lambda g, s_, p, lr: sgdm_update(g, s_, p, lr=lr, momentum=0.9),
+                lambda t: 1e-3, n_micro=n_micro,
+                grad_shardings=named(params_sds, p_specs, mesh),
+                grad_wire_bf16=grad_wire_bf16)
+            fn = jax.jit(step,
+                         in_shardings=(p_shard, o_shard, b_shard, None),
+                         out_shardings=(p_shard, o_shard, None),
+                         donate_argnums=(0, 1))
+            args = (params_sds, opt_sds, batch,
+                    jax.ShapeDtypeStruct((), jnp.int32))
+        else:
+            # prefill: forward + last-token logits (sampling-ready)
+            from repro.models.transformer import forward_hidden, logits_fn
+
+            def prefill(params, batch):
+                extras = {k: batch[k] for k in
+                          ("audio_feats", "patch_embeds", "mrope_positions")
+                          if k in batch}
+                h, _ = forward_hidden(params, batch["tokens"], cfg, ctx,
+                                      **extras)
+                return logits_fn(params, h[:, -1:], cfg)
+
+            fn = jax.jit(prefill, in_shardings=(p_shard, b_shard))
+            args = (params_sds, batch)
+    else:  # decode
+        long_ctx = shape_name == "long_500k"
+        toks, cache_sds = decode_inputs(cfg, shape, ctx, long_ctx)
+        c_specs = cache_specs(cfg, plan, cache_sds)
+        c_shard = named(cache_sds, c_specs, mesh)
+        t_shard = named(toks, batch_specs(cfg, plan, toks, seq_sharded=False),
+                        mesh)
+        pattern = cfg.pattern_for_long_context() if long_ctx else None
+
+        def serve_step(params, cache, batch):
+            # scan-over-layers decode; the ys cache stack double-buffers on
+            # the CPU backend (TPU donation aliases it in place) — recorded
+            # as cache_double_buffer_bytes in the artifact for honesty
+            return decode_step(params, cache, batch["tokens"], cfg, ctx,
+                               pattern=pattern)
+
+        fn = jax.jit(serve_step, in_shardings=(p_shard, c_shard, t_shard),
+                     out_shardings=(None, c_shard), donate_argnums=(1,))
+        args = (params_sds, cache_sds, toks)
+
+    with jax.set_mesh(mesh):
+        lowered = fn.lower(*args)
+        compiled = lowered.compile()
+    return cfg, shape, mesh, compiled
+
+
+def analyse(cfg: ModelConfig, shape: InputShape, mesh, compiled,
+            arch: str, shape_name: str, multi_pod: bool) -> Dict[str, Any]:
+    chips = mesh.devices.size
+    ca = compiled.cost_analysis() or {}
+    flops = float(ca.get("flops", 0.0))
+    bytes_acc = float(ca.get("bytes accessed", 0.0))
+    ma = compiled.memory_analysis()
+    mem = {}
+    if ma is not None:
+        mem = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+            "peak_bytes_est": int(ma.argument_size_in_bytes
+                                  + ma.temp_size_in_bytes
+                                  + ma.output_size_in_bytes
+                                  - ma.alias_size_in_bytes),
+        }
+        if shape.kind == "decode":
+            # the scanned cache's ys stack is double-buffered by the CPU
+            # backend; TPU in-place donation aliases it (DESIGN.md §8)
+            cache_bytes = int(ma.output_size_in_bytes)
+            mem["peak_bytes_tpu_adj"] = mem["peak_bytes_est"] - cache_bytes
+    # trip-count-aware walk of the optimized HLO (XLA's cost_analysis counts
+    # while bodies once — dist/hlo_cost.py); xla raw numbers kept for reference
+    hlo = compiled.as_text()
+    walk = hlo_cost.analyze_hlo(hlo)
+    coll = hlo_analysis.collective_bytes(hlo)           # body-once breakdown
+    coll["total_looped"] = walk["collective_bytes"]
+    terms = hlo_analysis.roofline(walk["flops"], walk["bytes"],
+                                  walk["collective_bytes"])
+    # MODEL_FLOPS / HLO_FLOPS
+    n_active = cfg.param_count(active_only=True)
+    if shape.kind == "train":
+        mf = hlo_analysis.model_flops(n_active,
+                                      shape.global_batch * shape.seq_len,
+                                      "train")
+    elif shape.kind == "prefill":
+        mf = hlo_analysis.model_flops(n_active,
+                                      shape.global_batch * shape.seq_len,
+                                      "decode")  # 2ND forward-only
+    else:
+        mf = hlo_analysis.model_flops(n_active, shape.global_batch, "decode")
+    mf_per_chip = mf / chips
+    return {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips,
+        "attn_mode": "n/a",
+        "flops_per_chip": walk["flops"], "bytes_per_chip": walk["bytes"],
+        "xla_flops_raw": flops, "xla_bytes_raw": bytes_acc,
+        "collective": coll, "memory": mem, "roofline": terms,
+        "model_flops_per_chip": mf_per_chip,
+        "useful_flops_ratio": (mf_per_chip / walk["flops"])
+        if walk["flops"] else 0.0,
+        "params_total": cfg.param_count(), "params_active": n_active,
+    }
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+            save_hlo: bool = False, tag_suffix: str = "",
+            n_micro_override: int = 0,
+            grad_wire_bf16: bool = False,
+            bf16_momentum: bool = False) -> Dict[str, Any]:
+    t0 = time.time()
+    cfg, shape, mesh, compiled = lower_one(arch, shape_name, multi_pod,
+                                           n_micro_override, grad_wire_bf16,
+                                           bf16_momentum)
+    rec = analyse(cfg, shape, mesh, compiled, arch, shape_name, multi_pod)
+    plan = make_plan(mesh)
+    rec["attn_mode"] = attn_mode_for(cfg, plan)
+    rec["n_micro"] = n_micro_override or pick_n_micro(cfg, shape, plan)
+    rec["grad_wire_bf16"] = grad_wire_bf16
+    rec["compile_s"] = time.time() - t0
+    os.makedirs(out_dir, exist_ok=True)
+    tag = (f"{arch}__{shape_name}__"
+           f"{'2x16x16' if multi_pod else '16x16'}{tag_suffix}")
+    with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    if save_hlo:
+        with open(os.path.join(out_dir, tag + ".hlo.txt"), "w") as f:
+            f.write(compiled.as_text())
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--n-micro", type=int, default=0)
+    ap.add_argument("--bf16-grad-wire", action="store_true")
+    ap.add_argument("--tag-suffix", default="")
+    ap.add_argument("--bf16-momentum", action="store_true")
+    args = ap.parse_args()
+    try:
+        rec = run_one(args.arch, args.shape, args.multi_pod, args.out,
+                      args.save_hlo, tag_suffix=args.tag_suffix,
+                      n_micro_override=args.n_micro,
+                      grad_wire_bf16=args.bf16_grad_wire,
+                      bf16_momentum=args.bf16_momentum)
+    except Exception:
+        traceback.print_exc()
+        raise SystemExit(1)
+    r = rec["roofline"]
+    print(f"OK {args.arch} {args.shape} mesh={rec['mesh']} "
+          f"compile={rec['compile_s']:.1f}s "
+          f"compute={r['compute_s']:.4f}s memory={r['memory_s']:.4f}s "
+          f"collective={r['collective_s']:.4f}s bottleneck={r['bottleneck']} "
+          f"peakMB={rec['memory'].get('peak_bytes_est', 0)/1e6:.0f} "
+          f"useful={rec['useful_flops_ratio']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""Serving launcher: batched autoregressive decoding with KV caches.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --reduced \
+        --batch 8 --prompt-len 32 --gen 64 [--long-context]
+
+Runs prefill (chunked flash attention) then jitted single-token decode steps
+against the layer-appropriate caches (ring buffers for SWA layers, recurrent
+states for RG-LRU/xLSTM).  ``--long-context`` switches dense archs to their
+sliding-window variant (the long_500k path).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models.decode import decode_step, init_cache, prefill_cross_kv
+from repro.models.transformer import RunCtx, forward_hidden, init_params, logits_fn
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=64)
+    ap.add_argument("--long-context", action="store_true")
+    ap.add_argument("--temperature", type=float, default=1.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    ctx = RunCtx(remat=False, chunk_q=min(128, args.prompt_len),
+                 chunk_k=min(128, args.prompt_len))
+    key = jax.random.PRNGKey(args.seed)
+    params = init_params(key, cfg)
+    pattern = cfg.pattern_for_long_context() if args.long_context else None
+
+    cache_len = args.prompt_len + args.gen
+    cache = init_cache(cfg, args.batch, cache_len, ctx, pattern=pattern)
+    extras = {}
+    if cfg.family == "audio":
+        extras["audio_feats"] = jax.random.normal(
+            key, (args.batch, cfg.encoder_seq_len, cfg.d_model))
+        cache = prefill_cross_kv(params, extras["audio_feats"], cfg, ctx, cache)
+
+    toks = jax.random.randint(key, (args.batch, args.prompt_len), 0,
+                              cfg.vocab_size)
+
+    step_jit = jax.jit(
+        lambda p, c, t: decode_step(p, c, t, cfg, ctx, pattern=pattern))
+
+    # prefill by stepping the cache through the prompt (cache-exact; a
+    # production prefill fuses this via forward_hidden + cache writes)
+    t0 = time.time()
+    logits = None
+    for i in range(args.prompt_len):
+        logits, cache = step_jit(params, cache, toks[:, i:i + 1])
+    t_prefill = time.time() - t0
+
+    out = []
+    key_s = key
+    t0 = time.time()
+    for i in range(args.gen):
+        key_s, sk = jax.random.split(key_s)
+        if args.temperature > 0:
+            nxt = jax.random.categorical(sk, logits / args.temperature, axis=-1)
+        else:
+            nxt = jnp.argmax(logits, axis=-1)
+        out.append(np.asarray(nxt))
+        logits, cache = step_jit(params, cache, nxt[:, None])
+    dt = time.time() - t0
+    toks_s = args.batch * args.gen / dt
+    print(f"arch={cfg.name} batch={args.batch} prefill={t_prefill:.2f}s "
+          f"decode={dt:.2f}s ({toks_s:.1f} tok/s) cache_len={cache_len}")
+    print("sample:", np.stack(out, 1)[0][:16])
+
+
+if __name__ == "__main__":
+    main()

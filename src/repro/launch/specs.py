@@ -1,0 +1,58 @@
+"""input_specs(): weak-type-correct ShapeDtypeStruct stand-ins for every model
+input — shardable, zero device allocation (the dry-run's working set)."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models.decode import init_cache
+from repro.models.transformer import RunCtx
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def train_batch_specs(cfg: ModelConfig, shape: InputShape,
+                      weighted: bool = True) -> Dict[str, Any]:
+    """Batch for a train/prefill step: tokens/labels (+ modality extras)."""
+    b, s = shape.global_batch, shape.seq_len
+    batch = {
+        "tokens": sds((b, s), jnp.int32),
+        "labels": sds((b, s), jnp.int32),
+    }
+    if weighted and shape.kind == "train":
+        batch["sample_weights"] = sds((b,), jnp.float32)
+    if cfg.family == "audio":
+        batch["audio_feats"] = sds((b, cfg.encoder_seq_len, cfg.d_model),
+                                   jnp.bfloat16)
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = sds((b, cfg.num_patch_tokens, cfg.d_model),
+                                    jnp.bfloat16)
+        batch["mrope_positions"] = sds((3, b, s), jnp.int32)
+    return batch
+
+
+def decode_inputs(cfg: ModelConfig, shape: InputShape, ctx: RunCtx,
+                  long_context: bool) -> Tuple[Dict[str, Any], Any]:
+    """(token specs, cache specs) for serve_step at this shape."""
+    b, s = shape.global_batch, shape.seq_len
+    pattern = cfg.pattern_for_long_context() if long_context else None
+    cache = init_cache(cfg, b, s, ctx, pattern=pattern, as_spec=True)
+    toks = {"tokens": sds((b, 1), jnp.int32)}
+    return toks, cache
+
+
+def concretize(spec_tree, seed: int = 0):
+    """Materialise ShapeDtypeStructs as small deterministic arrays (tests)."""
+    key = jax.random.PRNGKey(seed)
+
+    def one(s):
+        if jnp.issubdtype(s.dtype, jnp.integer):
+            return jnp.zeros(s.shape, s.dtype)
+        return jnp.full(s.shape, 0.01, s.dtype)
+
+    return jax.tree.map(one, spec_tree)

@@ -1,0 +1,5 @@
+from repro.models.transformer import (  # noqa: F401
+    RunCtx, forward_hidden, init_params, layer_sigs, lm_loss, logits_fn,
+    param_count_tree, stack_plan,
+)
+from repro.models.decode import decode_step, init_cache  # noqa: F401

@@ -1,0 +1,60 @@
+"""Small CNN classifier for the paper-faithful convergence experiments.
+
+Stands in (CPU-scale) for the paper's ResNet152/VGG19 on CIFAR — a VGG-style
+conv stack on 32x32x3 inputs.  Used only by the ScaDLES reproduction
+benchmarks; not part of the assigned architecture pool.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def init_cnn(key, cfg: ModelConfig, dtype=jnp.float32):
+    ch = cfg.d_model  # base width
+    widths = [3] + [min(ch * (2 ** i), 4 * ch) for i in range(cfg.num_layers)]
+    ks = jax.random.split(key, cfg.num_layers + 2)
+    params = {"conv": []}
+    for i in range(cfg.num_layers):
+        fan_in = widths[i] * 9
+        params["conv"].append({
+            "w": (jax.random.normal(ks[i], (3, 3, widths[i], widths[i + 1]),
+                                    jnp.float32) * (2.0 / fan_in) ** 0.5
+                  ).astype(dtype),
+            "b": jnp.zeros((widths[i + 1],), dtype),
+        })
+    d_last = widths[-1]
+    params["fc1"] = {
+        "w": (jax.random.normal(ks[-2], (d_last, cfg.d_ff), jnp.float32)
+              * (2.0 / d_last) ** 0.5).astype(dtype),
+        "b": jnp.zeros((cfg.d_ff,), dtype)}
+    params["fc2"] = {
+        "w": (jax.random.normal(ks[-1], (cfg.d_ff, cfg.vocab_size), jnp.float32)
+              * (1.0 / cfg.d_ff) ** 0.5).astype(dtype),
+        "b": jnp.zeros((cfg.vocab_size,), dtype)}
+    return params
+
+
+def cnn_forward(params, images, cfg: ModelConfig):
+    """images (b, 32, 32, 3) -> logits (b, classes)."""
+    x = images
+    for i, p in enumerate(params["conv"]):
+        x = jax.lax.conv_general_dilated(
+            x, p["w"], window_strides=(1, 1), padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        x = jax.nn.relu(x + p["b"])
+        # 2x2 max-pool each stage
+        x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
+                                  (1, 2, 2, 1), "VALID")
+    x = jnp.mean(x, axis=(1, 2))  # global average pool
+    x = jax.nn.relu(jnp.dot(x, params["fc1"]["w"]) + params["fc1"]["b"])
+    return jnp.dot(x, params["fc2"]["w"]) + params["fc2"]["b"]
+
+
+def cnn_loss(params, images, labels, cfg: ModelConfig):
+    logits = cnn_forward(params, images, cfg).astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(lse - gold)

@@ -1,0 +1,244 @@
+"""Serving: KV/recurrent-state caches + single-token decode step.
+
+Cache kinds per layer (sized from the *effective* pattern, so a long-context
+variant gets ring buffers of window size instead of full-length caches):
+
+* full attention  — (b, S, kv, hd) K/V, slot = pos
+* SWA / local     — ring buffer (b, W, kv, hd), slot = pos % W; RoPE is applied
+  at write time so scrambled storage order is harmless (relative rotary
+  geometry is position-, not slot-, dependent)
+* RG-LRU          — (h, conv taps): O(1) in sequence length
+* mLSTM / sLSTM   — matrix/scalar memory states: O(1)
+* whisper decoder — adds precomputed cross-attention K/V over encoder output
+
+Sharding: cache sequence dims shard over the tensor axis ("model") so decode
+works for any head count; softmax statistics reduce across shards via GSPMD
+(DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (ATTN_FULL, ATTN_LOCAL, ATTN_SWA, MLSTM,
+                                RECURRENT, SLSTM, ModelConfig)
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models import rglru as rglru_lib
+from repro.models import xlstm as xlstm_lib
+from repro.models.attention import decode_attention
+from repro.models.transformer import RunCtx, _norm, encode, layer_sigs, stack_plan
+
+
+def _effective(cfg: ModelConfig, pattern, li):
+    kind = pattern[li]
+    window = cfg.window_size
+    if cfg.pattern[li] == ATTN_FULL and kind == ATTN_SWA:
+        window = cfg.long_context_variant_window
+    return kind, window
+
+
+def _attn_cache_shape(cfg: ModelConfig, batch: int, cache_len: int,
+                      kind: str, window: int):
+    S = cache_len if kind == ATTN_FULL else min(window, cache_len)
+    return (batch, S, cfg.num_kv_heads, cfg.resolved_head_dim)
+
+
+def init_layer_cache(cfg: ModelConfig, batch: int, cache_len: int, kind: str,
+                     window: int, dtype, cross: bool = False,
+                     as_spec: bool = False):
+    """Concrete zeros (or ShapeDtypeStructs when ``as_spec``) for one layer."""
+    mk = (lambda sh, dt: jax.ShapeDtypeStruct(sh, dt)) if as_spec \
+        else (lambda sh, dt: jnp.zeros(sh, dt))
+    c: Dict[str, Any] = {}
+    if kind in (ATTN_FULL, ATTN_SWA, ATTN_LOCAL):
+        sh = _attn_cache_shape(cfg, batch, cache_len, kind, window)
+        c["k"] = mk(sh, dtype)
+        c["v"] = mk(sh, dtype)
+    elif kind == RECURRENT:
+        r = cfg.lru_dim or cfg.d_model
+        c["h"] = mk((batch, r), jnp.float32)
+        c["conv"] = mk((batch, rglru_lib._CONV_W - 1, r), dtype)
+    elif kind == MLSTM:
+        nh, hd = cfg.num_heads, cfg.resolved_head_dim
+        c["c"] = mk((batch, nh, hd, hd), jnp.float32)
+        c["n"] = mk((batch, nh, hd), jnp.float32)
+        c["m"] = mk((batch, nh), jnp.float32)
+    elif kind == SLSTM:
+        nh, hd = cfg.num_heads, cfg.resolved_head_dim
+        for name in ("c", "n", "h"):
+            c[name] = mk((batch, nh, hd), jnp.float32)
+        c["m"] = mk((batch, nh, hd), jnp.float32)
+    if cross:
+        sh = (batch, cfg.encoder_seq_len, cfg.num_kv_heads, cfg.resolved_head_dim)
+        c["ck"] = mk(sh, dtype)
+        c["cv"] = mk(sh, dtype)
+    return c
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int, ctx: RunCtx,
+               pattern: Optional[Sequence[str]] = None, as_spec: bool = False):
+    """Full decode cache pytree, mirroring the stack plan layout."""
+    pattern = tuple(pattern) if pattern is not None else cfg.pattern
+    sigs = layer_sigs(cfg)
+    u, reps, rem = stack_plan(sigs)
+    cross = cfg.encoder_layers > 0
+    dt = ctx.param_dtype
+
+    def stack(tree):
+        return jax.tree.map(
+            lambda x: (jax.ShapeDtypeStruct((reps,) + x.shape, x.dtype)
+                       if as_spec else jnp.broadcast_to(x, (reps,) + x.shape)),
+            tree)
+
+    cache: Dict[str, Any] = {"unit": {}, "rest": {}}
+    for j in range(u):
+        kind, window = _effective(cfg, pattern, j)
+        cache["unit"][f"p{j}"] = stack(init_layer_cache(
+            cfg, batch, cache_len, kind, window, dt, cross, as_spec))
+    for i in range(rem):
+        li = u * reps + i
+        kind, window = _effective(cfg, pattern, li)
+        cache["rest"][f"l{li}"] = init_layer_cache(
+            cfg, batch, cache_len, kind, window, dt, cross, as_spec)
+    cache["pos"] = (jax.ShapeDtypeStruct((), jnp.int32) if as_spec
+                    else jnp.zeros((), jnp.int32))
+    return cache
+
+
+def prefill_cross_kv(params, audio_feats, cfg: ModelConfig, ctx: RunCtx, cache):
+    """Populate whisper cross-attention K/V from encoder output."""
+    enc_out = encode(params, audio_feats, cfg, ctx)
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    b, s, _ = enc_out.shape
+
+    def proj(bp, cl):
+        cl = dict(cl)
+        cl["ck"] = jnp.dot(enc_out, bp["cross"]["wk"]).reshape(b, s, kv, hd)
+        cl["cv"] = jnp.dot(enc_out, bp["cross"]["wv"]).reshape(b, s, kv, hd)
+        return cl
+
+    for j, cl in cache["unit"].items():
+        bp = params["unit"][j]
+        cache["unit"][j] = jax.vmap(proj)(bp, cl)
+    for i, cl in cache["rest"].items():
+        cache["rest"][i] = proj(params["rest"][i], cl)
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# decode
+
+
+def _block_decode(bp, x, cl, cfg: ModelConfig, ctx: RunCtx, sig, kind: str,
+                  window: int, pos):
+    knd, ffn = sig
+    cl = dict(cl)
+    h = _norm(bp["norm1"], x, cfg)
+    if knd in (ATTN_FULL, ATTN_SWA, ATTN_LOCAL):
+        q, k, v = L.qkv_proj(bp["attn"], h, cfg)
+        if cfg.family != "audio":
+            cos, sin = L.rope_angles(pos[None], cfg.resolved_head_dim,
+                                     cfg.rope_theta)
+            q = L.apply_rotary(q, cos, sin)
+            k = L.apply_rotary(k, cos, sin)
+        S = cl["k"].shape[1]
+        slot = pos % S  # full cache: pos < S so slot == pos; ring: wraps
+        # optimization_barrier keeps the cache DUS un-fused: XLA otherwise
+        # merges it with neighbouring converts and materialises an fp32 copy
+        # of the whole stacked cache as a fusion temp (2x cache memory)
+        cl["k"], cl["v"] = jax.lax.optimization_barrier((
+            jax.lax.dynamic_update_slice_in_dim(cl["k"], k, slot, axis=1),
+            jax.lax.dynamic_update_slice_in_dim(cl["v"], v, slot, axis=1)))
+        kv_len = jnp.minimum(pos + 1, S)
+        o = decode_attention(q, cl["k"], cl["v"], kv_len)
+        x = x + L.out_proj(bp["attn"], o)
+    elif knd == RECURRENT:
+        y, hh, conv = rglru_lib.rglru_decode_step(bp["rglru"], h, cl["h"],
+                                                  cl["conv"])
+        cl["h"], cl["conv"] = hh, conv
+        x = x + y
+    elif knd == MLSTM:
+        st = xlstm_lib.MLSTMState(cl["c"], cl["n"], cl["m"])
+        y, st = xlstm_lib.mlstm_decode_step(bp["mlstm"], h, cfg, st)
+        cl["c"], cl["n"], cl["m"] = st.c, st.n, st.m
+        x = x + y
+    elif knd == SLSTM:
+        st = xlstm_lib.SLSTMState(cl["c"], cl["n"], cl["h"], cl["m"])
+        y, st = xlstm_lib.slstm_decode_step(bp["slstm"], h, cfg, st)
+        cl["c"], cl["n"], cl["h"], cl["m"] = st.c, st.n, st.h, st.m
+        x = x + y
+    if "ck" in cl:  # whisper cross-attention (encoder K/V precomputed)
+        hc = _norm(bp["norm_cross"], x, cfg)
+        qc, _, _ = L.qkv_proj(bp["cross"], hc, cfg)
+        oc = decode_attention(qc, cl["ck"], cl["cv"], cl["ck"].shape[1])
+        x = x + L.out_proj(bp["cross"], oc)
+    if ffn != "none":
+        h2 = _norm(bp["norm2"], x, cfg)
+        if ffn == "moe":
+            y, _ = moe_lib.moe_ffn(bp["moe"], h2, cfg, ctx)
+            x = x + y
+        else:
+            x = x + L.mlp(bp["mlp"], h2, ctx)
+    return x, cl
+
+
+def decode_step(params, cache, tokens, cfg: ModelConfig, ctx: RunCtx,
+                pattern: Optional[Sequence[str]] = None,
+                unroll: bool = False):
+    """One decode step. tokens (b, 1) int32 -> (logits (b, V) fp32, cache).
+
+    ``unroll=True`` replaces the scan-over-layers with a static Python loop
+    over the stacked params/caches: each layer's cache update aliases in
+    place under buffer donation, where a scan's ys stack double-buffers the
+    whole cache (2x cache memory on some backends).  HLO grows ~O(layers).
+    """
+    pattern = tuple(pattern) if pattern is not None else cfg.pattern
+    sigs = layer_sigs(cfg)
+    u, reps, rem = stack_plan(sigs)
+    pos = cache["pos"]
+
+    x = jnp.take(params["embed"], tokens, axis=0).astype(ctx.compute_dtype)
+    if cfg.family == "hybrid":
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    if cfg.family == "audio":
+        half = cfg.d_model // 2
+        freq = 10000.0 ** (-jnp.arange(half, dtype=jnp.float32) / half)
+        ang = pos.astype(jnp.float32) * freq
+        pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])
+        x = x + pe.astype(x.dtype)[None, None]
+
+    def unit_body(x, inp):
+        up, uc = inp
+        new_uc = {}
+        for j in range(u):
+            kind, window = _effective(cfg, pattern, j)
+            x, new_uc[f"p{j}"] = _block_decode(
+                up[f"p{j}"], x, uc[f"p{j}"], cfg, ctx, sigs[j], kind, window, pos)
+        return x, new_uc
+
+    if unroll:
+        take = lambda t, r: jax.tree.map(lambda a: a[r], t)
+        outs = []
+        for r in range(reps):
+            x, uc_new = unit_body(x, (take(params["unit"], r),
+                                      take(cache["unit"], r)))
+            outs.append(uc_new)
+        new_unit = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+    else:
+        x, new_unit = jax.lax.scan(unit_body, x,
+                                   (params["unit"], cache["unit"]))
+    new_rest = {}
+    for i in range(rem):
+        li = u * reps + i
+        kind, window = _effective(cfg, pattern, li)
+        x, new_rest[f"l{li}"] = _block_decode(
+            params["rest"][f"l{li}"], x, cache["rest"][f"l{li}"], cfg, ctx,
+            sigs[li], kind, window, pos)
+
+    x = _norm(params["final_norm"], x, cfg)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.dot(x[:, 0], head).astype(jnp.float32)
+    return logits, {"unit": new_unit, "rest": new_rest, "pos": pos + 1}

@@ -1,0 +1,156 @@
+"""Core layers: norms, projections, rotary embeddings (RoPE / M-RoPE), MLP.
+
+All init fns are pure (key -> pytree of arrays) so ``jax.eval_shape`` can build
+allocation-free parameter skeletons for the multi-pod dry-run.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+# ---------------------------------------------------------------------------
+# init helpers
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32, scale: Optional[float] = None):
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), dtype=jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return (jax.random.normal(key, (vocab, d), dtype=jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+
+
+def rope_angles(positions, head_dim: int, theta: float):
+    """positions (..., s) -> cos/sin of shape (..., s, head_dim//2)."""
+    half = head_dim // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rotary(x, cos, sin):
+    """x (b, s, h, hd); cos/sin (b, s, hd//2) or (s, hd//2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:  # (s, half)
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:              # (b, s, half)
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    dt = x.dtype
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1).astype(dt)
+
+
+def mrope_angles(positions_3d, head_dim: int, sections: Tuple[int, int, int],
+                 theta: float):
+    """Qwen2-VL multimodal RoPE.
+
+    positions_3d: (3, b, s) — temporal / height / width position streams.
+    Frequency slots are split into ``sections`` (summing to head_dim//2); each
+    section takes its angle from the corresponding position stream.
+    """
+    half = head_dim // 2
+    assert sum(sections) == half, (sections, half)
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions_3d[..., None].astype(jnp.float32) * freq  # (3, b, s, half)
+    sec_id = jnp.repeat(jnp.arange(3), jnp.array(sections),
+                        total_repeat_length=half)              # (half,)
+    one_hot = jax.nn.one_hot(sec_id, 3, dtype=jnp.float32)     # (half, 3)
+    ang = jnp.einsum("pbsh,hp->bsh", ang, one_hot)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+
+
+def init_mlp(key, d: int, d_ff: int, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d, d_ff, dtype),
+        "w_up": dense_init(k2, d, d_ff, dtype),
+        "w_down": dense_init(k3, d_ff, d, dtype),
+    }
+
+
+def mlp(params, x, ctx=None):
+    g = jnp.dot(x, params["w_gate"])
+    u = jnp.dot(x, params["w_up"])
+    h = jax.nn.silu(g) * u
+    if ctx is not None:
+        # pin the FFN hidden to (batch, seq-local, ff@tp): keeps the dw
+        # transpose-dots sharded on d_ff instead of full-shape f32 monsters
+        h = ctx.constrain(h, (ctx.dp_axes, None, ctx.tp_axis))
+    return jnp.dot(h, params["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# attention projections
+
+
+def init_attention(key, cfg: ModelConfig, dtype=jnp.float32):
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, h * hd, dtype),
+        "wk": dense_init(ks[1], d, kv * hd, dtype),
+        "wv": dense_init(ks[2], d, kv * hd, dtype),
+        "wo": dense_init(ks[3], h * hd, d, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dtype)
+        p["bk"] = jnp.zeros((kv * hd,), dtype)
+        p["bv"] = jnp.zeros((kv * hd,), dtype)
+    return p
+
+
+def qkv_proj(params, x, cfg: ModelConfig):
+    """x (b, s, d) -> q (b, s, h, hd), k/v (b, s, kv, hd)."""
+    b, s, _ = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = jnp.dot(x, params["wq"])
+    k = jnp.dot(x, params["wk"])
+    v = jnp.dot(x, params["wv"])
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(q.dtype)
+        k = k + params["bk"].astype(k.dtype)
+        v = v + params["bv"].astype(v.dtype)
+    return (q.reshape(b, s, h, hd), k.reshape(b, s, kv, hd),
+            v.reshape(b, s, kv, hd))
+
+
+def out_proj(params, attn_out):
+    b, s, h, hd = attn_out.shape
+    return jnp.dot(attn_out.reshape(b, s, h * hd), params["wo"])

@@ -1,0 +1,133 @@
+"""Mixture-of-Experts FFN: GShard-style grouped dispatch with capacity.
+
+Tokens are reshaped into groups of ``group_size``; a one-hot dispatch tensor
+(groups, S, E, C) routes each token to its top-k experts subject to a per-group
+per-expert capacity C = S*top_k/E*capacity_factor (overflow tokens are dropped,
+standard GShard semantics).  Grouping keeps the dispatch tensor O(S*E*C) per
+group instead of O(tokens^2)-scale monsters (DESIGN.md §5).
+
+Expert sharding is declared on the stacked weights by ``dist/sharding.py``:
+ * experts >= TP-width (Llama-4, 128): expert dim sharded over "model" —
+   true expert parallelism; the dispatch einsum lowers to an all-to-all.
+ * experts < TP-width (Mixtral, 8): expert dim replicated, each expert's d_ff
+   sharded over "model" — tensor-parallel experts.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.models import layers
+
+
+def init_moe(key, cfg: ModelConfig, dtype=jnp.float32):
+    moe = cfg.moe
+    d, ff, E = cfg.d_model, cfg.d_ff, moe.num_experts
+    ks = jax.random.split(key, 5)
+    scale = 1.0 / jnp.sqrt(d)
+
+    def experts(k, d_in, d_out):
+        return (jax.random.normal(k, (E, d_in, d_out), jnp.float32)
+                * (1.0 / jnp.sqrt(d_in))).astype(dtype)
+
+    p = {
+        "router": (jax.random.normal(ks[0], (d, E), jnp.float32) * scale
+                   ).astype(jnp.float32),  # router stays fp32
+        "we_gate": experts(ks[1], d, ff),
+        "we_up": experts(ks[2], d, ff),
+        "we_down": experts(ks[3], ff, d),
+    }
+    if moe.num_shared_experts:
+        p["shared"] = layers.init_mlp(ks[4], d, ff * moe.num_shared_experts, dtype)
+    return p
+
+
+def capacity(moe: MoEConfig) -> int:
+    c = int(moe.group_size * moe.top_k * moe.capacity_factor / moe.num_experts)
+    return max(c, 4)
+
+
+def moe_ffn(params, x, cfg: ModelConfig,
+            ctx=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x (b, s, d) -> (y (b, s, d), aux_loss scalar).
+
+    aux_loss is the GShard/Switch load-balance loss  E * sum_e f_e * p_e.
+    ``ctx`` (RunCtx) pins the expert-tensor shardings: without explicit
+    constraints GSPMD has been observed to gather expert weights to full
+    d_ff on every chip (16x replicated expert flops).
+    """
+    moe = cfg.moe
+    b, s, d = x.shape
+    E, K = moe.num_experts, moe.top_k
+    S = min(moe.group_size, s)
+    assert s % S == 0, (s, S)
+    G = s // S
+    C = capacity(moe)
+    xg = x.reshape(b, G, S, d)
+
+    # expert-parallel (E % tp == 0) vs tensor-parallel experts (d_ff over tp)
+    ep = None
+    if ctx is not None and ctx.mesh is not None:
+        tp_size = ctx.mesh.shape[ctx.tp_axis]
+        ep = "expert" if E % tp_size == 0 else "ff"
+
+    def pin(t, axes):
+        return ctx.constrain(t, axes) if ep is not None else t
+
+    xg = pin(xg, (ctx.dp_axes, None, None, None) if ep else None)
+
+    # fp32 router math without materialising an fp32 copy of the activations
+    logits = jnp.einsum("bgsd,de->bgse", xg,
+                        params["router"].astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                      # (b,G,S,E)
+
+    # top-k selection, sequential-priority capacity assignment
+    gate_k, idx_k = jax.lax.top_k(probs, K)                      # (b,G,S,K)
+    combine = jnp.zeros((b, G, S, E, C), dtype=jnp.float32)
+    # position counters per expert accumulate across the k priority levels
+    fill = jnp.zeros((b, G, E), jnp.int32)
+    for k in range(K):
+        onehot_e = jax.nn.one_hot(idx_k[..., k], E, dtype=jnp.int32)   # (b,G,S,E)
+        pos = jnp.cumsum(onehot_e, axis=2) - 1 + fill[:, :, None, :]   # slot per token
+        fill = fill + jnp.sum(onehot_e, axis=2)
+        keep = (pos < C) & (onehot_e > 0)
+        pos = jnp.clip(pos, 0, C - 1)
+        onehot_c = jax.nn.one_hot(pos, C, dtype=jnp.float32)           # (b,G,S,E,C)
+        combine = combine + (gate_k[..., k][..., None, None]
+                             * keep[..., None] * onehot_c)
+    if K > 1:  # renormalise kept top-k gates (Mixtral normalises over top-k)
+        denom = jnp.sum(gate_k, axis=-1)[..., None, None]
+        combine = combine / jnp.maximum(denom, 1e-9)
+    dispatch = (combine > 0).astype(x.dtype)                     # (b,G,S,E,C)
+
+    xin = jnp.einsum("bgsec,bgsd->begcd", dispatch, xg)          # (b,E,G,C,d)
+    if ep == "expert":      # dispatch all-to-all onto the expert axis
+        e_ax = (ctx.dp_axes, ctx.tp_axis, None, None, None)
+        f_ax = (ctx.dp_axes, ctx.tp_axis, None, None, None)
+    elif ep == "ff":        # experts replicated, d_ff sharded over tp
+        e_ax = (ctx.dp_axes, None, None, None, None)
+        f_ax = (ctx.dp_axes, None, None, None, ctx.tp_axis)
+    else:
+        e_ax = f_ax = None
+    xin = pin(xin, e_ax)
+    h = jax.nn.silu(jnp.einsum("begcd,edf->begcf", xin, params["we_gate"]))
+    h = h * jnp.einsum("begcd,edf->begcf", xin, params["we_up"])
+    h = pin(h, f_ax)
+    out = jnp.einsum("begcf,efd->begcd", h, params["we_down"])   # (b,E,G,C,d)
+    out = pin(out, e_ax)
+    y = jnp.einsum("bgsec,begcd->bgsd", combine.astype(x.dtype), out)
+    y = y.reshape(b, s, d)
+
+    if "shared" in params:
+        y = y + layers.mlp(params["shared"], x)
+
+    # load-balance aux loss
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(idx_k[..., 0], E, dtype=jnp.float32), axis=(0, 1, 2))
+    frac_probs = jnp.mean(probs, axis=(0, 1, 2))
+    aux = E * jnp.sum(frac_tokens * frac_probs)
+    return y, aux

@@ -1,0 +1,242 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory) + sLSTM (scalar).
+
+* mLSTM has no hidden-to-hidden recurrence, so it parallelises: we implement
+  the *chunkwise* form (lax.scan over chunks, quadratic only within a chunk,
+  matrix state (hd x hd) carried across chunks) with the paper's max-state
+  exponential-gate stabilisation.  A sequential step is used for decode and as
+  the test oracle.
+* sLSTM has true recurrence (block-diagonal per-head R matrices) and runs as a
+  ``lax.scan`` over the sequence; features shard over the tensor axis.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+
+
+class MLSTMState(NamedTuple):
+    c: jnp.ndarray   # (b, nh, hd, hd) fp32
+    n: jnp.ndarray   # (b, nh, hd) fp32
+    m: jnp.ndarray   # (b, nh) fp32
+
+
+def init_mlstm(key, cfg: ModelConfig, dtype=jnp.float32):
+    d, nh, hd = cfg.d_model, cfg.num_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 7)
+    return {
+        "wq": dense_init(ks[0], d, nh * hd, dtype),
+        "wk": dense_init(ks[1], d, nh * hd, dtype),
+        "wv": dense_init(ks[2], d, nh * hd, dtype),
+        "wi": dense_init(ks[3], d, nh, dtype),
+        "bi": jnp.zeros((nh,), jnp.float32),
+        "wf": dense_init(ks[4], d, nh, dtype),
+        "bf": jnp.full((nh,), 3.0, jnp.float32),  # forget-gate bias > 0
+        "w_ogate": dense_init(ks[5], d, nh * hd, dtype),
+        "w_out": dense_init(ks[6], nh * hd, d, dtype),
+    }
+
+
+def mlstm_init_state(cfg: ModelConfig, batch: int) -> MLSTMState:
+    nh, hd = cfg.num_heads, cfg.resolved_head_dim
+    return MLSTMState(
+        jnp.zeros((batch, nh, hd, hd), jnp.float32),
+        jnp.zeros((batch, nh, hd), jnp.float32),
+        jnp.full((batch, nh), -1e30, jnp.float32))
+
+
+def _mlstm_qkvif(params, x, cfg):
+    b, s, _ = x.shape
+    nh, hd = cfg.num_heads, cfg.resolved_head_dim
+    q = jnp.dot(x, params["wq"]).reshape(b, s, nh, hd)
+    k = jnp.dot(x, params["wk"]).reshape(b, s, nh, hd) * (hd ** -0.5)
+    v = jnp.dot(x, params["wv"]).reshape(b, s, nh, hd)
+    i = jnp.dot(x, params["wi"]).astype(jnp.float32) + params["bi"]
+    lf = jax.nn.log_sigmoid(
+        jnp.dot(x, params["wf"]).astype(jnp.float32) + params["bf"])
+    return q, k, v, i, lf
+
+
+def mlstm_chunked(params, x, cfg: ModelConfig, state: MLSTMState = None,
+                  chunk: int = 256, return_state: bool = False):
+    """x (b, s, d) -> (b, s, d).  Chunk-parallel stabilised mLSTM."""
+    b, s, d = x.shape
+    nh, hd = cfg.num_heads, cfg.resolved_head_dim
+    q, k, v, ig, lf = _mlstm_qkvif(params, x, cfg)
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    nc = s // chunk
+
+    def resh(t):  # (b, s, ...) -> (nc, b, chunk, ...)
+        return t.reshape(b, nc, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+    qc, kc, vc, ic, lfc = map(resh, (q, k, v, ig, lf))
+    if state is None:
+        state = mlstm_init_state(cfg, b)
+
+    def chunk_step(carry, inp):
+        C, N, M = carry                       # (b,nh,hd,hd) (b,nh,hd) (b,nh)
+        qx, kx, vx, ix, lfx = inp             # (b,chunk,...)
+        bcs = jnp.cumsum(lfx, axis=1)         # (b,chunk,nh) inclusive
+        m_inter = bcs + M[:, None]            # (b,chunk,nh)
+        # intra scores decay: b_t - b_s + i_s for s<=t
+        gap = bcs[:, :, None] - bcs[:, None] + ix[:, None]   # (b,t,s,nh)
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        gap = jnp.where(tri[None, :, :, None], gap, -jnp.inf)
+        m_intra = jnp.max(gap, axis=2)                        # (b,t,nh)
+        m_t = jnp.maximum(m_inter, m_intra)
+        inter = jnp.exp(m_inter - m_t)                        # (b,t,nh)
+        decay = jnp.exp(gap - m_t[:, :, None])                # (b,t,s,nh)
+        qk = jnp.einsum("bthd,bshd->btsh", qx.astype(jnp.float32),
+                        kx.astype(jnp.float32))
+        sc = qk * decay                                       # (b,t,s,nh)
+        num = (jnp.einsum("btsh,bshd->bthd", sc, vx.astype(jnp.float32))
+               + inter[..., None] * jnp.einsum(
+                   "bthd,bhde->bthe", qx.astype(jnp.float32), C))
+        den = (jnp.sum(sc, axis=2)
+               + inter * jnp.einsum("bthd,bhd->bth", qx.astype(jnp.float32), N))
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+        # end-of-chunk state
+        B = bcs[:, -1]                                        # (b,nh)
+        m_new = jnp.maximum(B + M, jnp.max(
+            jnp.where(jnp.isfinite(gap[:, -1]), gap[:, -1], -jnp.inf), axis=1))
+        kdec = jnp.exp(B[:, None] - bcs + ix - m_new[:, None])  # (b,s,nh)
+        C_new = (jnp.exp(B + M - m_new)[:, :, None, None] * C
+                 + jnp.einsum("bsh,bshd,bshe->bhde", kdec,
+                              kx.astype(jnp.float32), vx.astype(jnp.float32)))
+        N_new = (jnp.exp(B + M - m_new)[:, :, None] * N
+                 + jnp.einsum("bsh,bshd->bhd", kdec, kx.astype(jnp.float32)))
+        return (C_new, N_new, m_new), h
+
+    (C, N, M), hs = jax.lax.scan(chunk_step, tuple(state), (qc, kc, vc, ic, lfc))
+    h = hs.swapaxes(0, 1).reshape(b, s, nh, hd).astype(x.dtype)
+    og = jax.nn.sigmoid(jnp.dot(x, params["w_ogate"])).reshape(b, s, nh, hd)
+    out = jnp.dot((h * og).reshape(b, s, nh * hd), params["w_out"])
+    if return_state:
+        return out, MLSTMState(C, N, M)
+    return out
+
+
+def mlstm_decode_step(params, x, cfg: ModelConfig, state: MLSTMState):
+    """x (b, 1, d) -> (y (b, 1, d), new state).  Sequential stabilised step."""
+    b = x.shape[0]
+    nh, hd = cfg.num_heads, cfg.resolved_head_dim
+    q, k, v, ig, lf = _mlstm_qkvif(params, x, cfg)
+    q, k, v = q[:, 0].astype(jnp.float32), k[:, 0].astype(jnp.float32), v[:, 0].astype(jnp.float32)
+    ig, lf = ig[:, 0], lf[:, 0]                                  # (b, nh)
+    C, N, M = state
+    m_new = jnp.maximum(lf + M, ig)
+    a = jnp.exp(lf + M - m_new)[..., None]
+    bb = jnp.exp(ig - m_new)[..., None]
+    C = a[..., None] * C + bb[..., None] * jnp.einsum("bhd,bhe->bhde", k, v)
+    N = a * N + bb * k
+    num = jnp.einsum("bhd,bhde->bhe", q, C)
+    den = jnp.einsum("bhd,bhd->bh", q, N)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    og = jax.nn.sigmoid(jnp.dot(x[:, 0], params["w_ogate"])).reshape(b, nh, hd)
+    y = jnp.dot((h.astype(x.dtype) * og).reshape(b, nh * hd), params["w_out"])
+    return y[:, None], MLSTMState(C, N, m_new)
+
+
+def mlstm_sequential(params, x, cfg: ModelConfig, state: MLSTMState = None):
+    """Step-by-step oracle used by tests to validate the chunked form."""
+    b = x.shape[0]
+    if state is None:
+        state = mlstm_init_state(cfg, b)
+    ys = []
+    for t in range(x.shape[1]):
+        y, state = mlstm_decode_step(params, x[:, t:t + 1], cfg, state)
+        ys.append(y)
+    return jnp.concatenate(ys, axis=1), state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+
+
+class SLSTMState(NamedTuple):
+    c: jnp.ndarray   # (b, nh, hd) fp32
+    n: jnp.ndarray   # (b, nh, hd) fp32
+    h: jnp.ndarray   # (b, nh, hd) fp32
+    m: jnp.ndarray   # (b, nh, hd) fp32
+
+
+def init_slstm(key, cfg: ModelConfig, dtype=jnp.float32):
+    d, nh, hd = cfg.d_model, cfg.num_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 3)
+    return {
+        # input projections for z,i,f,o stacked: d -> 4*nh*hd
+        "w_in": dense_init(ks[0], d, 4 * nh * hd, dtype),
+        "b_in": jnp.concatenate([
+            jnp.zeros((nh * hd,), jnp.float32),        # z
+            jnp.zeros((nh * hd,), jnp.float32),        # i
+            jnp.full((nh * hd,), 3.0, jnp.float32),    # f bias > 0
+            jnp.zeros((nh * hd,), jnp.float32)]),      # o
+        # block-diagonal recurrent weights per head: (nh, hd, 4*hd)
+        "r": (jax.random.normal(ks[1], (nh, hd, 4 * hd), jnp.float32)
+              * (1.0 / jnp.sqrt(hd))).astype(dtype),
+        "w_out": dense_init(ks[2], d, d, dtype),
+    }
+
+
+def slstm_init_state(cfg: ModelConfig, batch: int) -> SLSTMState:
+    nh, hd = cfg.num_heads, cfg.resolved_head_dim
+    z = jnp.zeros((batch, nh, hd), jnp.float32)
+    return SLSTMState(z, z, z, jnp.full((batch, nh, hd), -1e30, jnp.float32))
+
+
+def _slstm_cell(params, u_t, state: SLSTMState, nh: int, hd: int):
+    """u_t (b, 4*nh*hd) pre-activation from input; returns (h_bshd, state)."""
+    c, n, h, m = state
+    rec = jnp.einsum("bhd,hde->bhe", h.astype(params["r"].dtype), params["r"])
+    pre = (u_t.reshape(-1, nh, 4 * hd).astype(jnp.float32)
+           + rec.astype(jnp.float32) + params["b_in"].reshape(nh, 4 * hd))
+    z, i, f, o = jnp.split(pre, 4, axis=-1)          # (b, nh, hd) each
+    z = jnp.tanh(z)
+    o = jax.nn.sigmoid(o)
+    lf = jax.nn.log_sigmoid(f)
+    m_new = jnp.maximum(lf + m, i)
+    a = jnp.exp(lf + m - m_new)
+    bb = jnp.exp(i - m_new)
+    c = a * c + bb * z
+    n = a * n + bb
+    h_new = o * (c / jnp.maximum(n, 1e-12))
+    return h_new, SLSTMState(c, n, h_new, m_new)
+
+
+def slstm_block(params, x, cfg: ModelConfig, state: SLSTMState = None,
+                return_state: bool = False):
+    """x (b, s, d) -> (b, s, d) via lax.scan over the sequence."""
+    b, s, d = x.shape
+    nh, hd = cfg.num_heads, cfg.resolved_head_dim
+    u = jnp.dot(x, params["w_in"])                    # (b, s, 4*nh*hd)
+    if state is None:
+        state = slstm_init_state(cfg, b)
+
+    def step(st, u_t):
+        h, st = _slstm_cell(params, u_t, st, nh, hd)
+        return st, h
+
+    state, hs = jax.lax.scan(step, state, u.swapaxes(0, 1))
+    hs = hs.swapaxes(0, 1).reshape(b, s, nh * hd).astype(x.dtype)
+    out = jnp.dot(hs, params["w_out"])
+    if return_state:
+        return out, state
+    return out
+
+
+def slstm_decode_step(params, x, cfg: ModelConfig, state: SLSTMState):
+    b, _, d = x.shape
+    nh, hd = cfg.num_heads, cfg.resolved_head_dim
+    u = jnp.dot(x[:, 0], params["w_in"])
+    h, state = _slstm_cell(params, u, state, nh, hd)
+    out = jnp.dot(h.reshape(b, nh * hd).astype(x.dtype), params["w_out"])
+    return out[:, None], state

@@ -1,0 +1,4 @@
+from repro.optim.optimizers import (  # noqa: F401
+    adam_init, adam_update, make_optimizer, sgdm_init, sgdm_update,
+)
+from repro.optim.schedules import multistep_lr, warmup_cosine  # noqa: F401

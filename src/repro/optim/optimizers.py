@@ -1,0 +1,80 @@
+"""Functional optimizers (optax-like, no external deps).
+
+SGD-with-momentum matches the paper's training recipe (momentum 0.9, weight
+decay); Adam is provided for the transformer examples.  Optimizer states are
+plain pytrees sharded identically to the parameters (dist/sharding.py), which
+is what makes the 123B configs fit: params bf16 + fp32 moments are all
+FSDPxTP-sharded.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def sgdm_init(params, mom_dtype=jnp.float32):
+    """``mom_dtype=bf16`` halves optimizer-state memory — the standard lever
+    for 100B+ configs (llama4-maverick's fp32 moments alone are 6.25 GB/chip
+    on a 256-chip pod)."""
+    return {"mom": jax.tree.map(lambda p: jnp.zeros(p.shape, mom_dtype),
+                                params)}
+
+
+def sgdm_update(grads, state, params, *, lr, momentum=0.9, weight_decay=0.0,
+                nesterov=False):
+    def upd(g, m, p):
+        g = g.astype(jnp.float32) + weight_decay * p.astype(jnp.float32)
+        m2 = momentum * m.astype(jnp.float32) + g
+        step = g + momentum * m2 if nesterov else m2
+        return ((p.astype(jnp.float32) - lr * step).astype(p.dtype),
+                m2.astype(m.dtype))
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["mom"])
+    new = [upd(g, m, p) for g, m, p in zip(flat_g, flat_m, flat_p)]
+    return (jax.tree.unflatten(tdef, [x[0] for x in new]),
+            {"mom": jax.tree.unflatten(tdef, [x[1] for x in new])})
+
+
+def adam_init(params):
+    z = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params),
+            "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(grads, state, params, *, lr, b1=0.9, b2=0.95, eps=1e-8,
+                weight_decay=0.0):
+    t = state["t"] + 1
+    tf = t.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m2 = b1 * m + (1 - b1) * g
+        v2 = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m2 / (1 - b1 ** tf)
+        vhat = v2 / (1 - b2 ** tf)
+        step = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m2, v2
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    new = [upd(g, m, v, p) for g, m, v, p
+           in zip(flat_g, flat_m, flat_v, flat_p)]
+    return (jax.tree.unflatten(tdef, [x[0] for x in new]),
+            {"m": jax.tree.unflatten(tdef, [x[1] for x in new]),
+             "v": jax.tree.unflatten(tdef, [x[2] for x in new]),
+             "t": t})
+
+
+def make_optimizer(name: str, **kw) -> Tuple[Callable, Callable]:
+    if name == "sgdm":
+        return sgdm_init, lambda g, s, p, lr: sgdm_update(g, s, p, lr=lr, **kw)
+    if name == "adam":
+        return adam_init, lambda g, s, p, lr: adam_update(g, s, p, lr=lr, **kw)
+    raise ValueError(name)

@@ -1,0 +1,30 @@
+"""LR schedules: paper-style multistep decay + warmup-cosine for examples."""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax.numpy as jnp
+
+
+def multistep_lr(base_lr: float, milestones: Sequence[int], gamma: float):
+    """Paper recipe: e.g. ResNet152 lr=0.1, x0.2 at epochs 75/150/225."""
+    ms = jnp.asarray(list(milestones))
+
+    def lr(step):
+        n = jnp.sum(step >= ms)
+        return base_lr * (gamma ** n)
+
+    return lr
+
+
+def warmup_cosine(base_lr: float, warmup: int, total: int,
+                  min_frac: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * (min_frac + (1 - min_frac) * 0.5
+                         * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr

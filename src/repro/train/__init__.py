@@ -1,0 +1,4 @@
+from repro.train.step import (  # noqa: F401
+    make_eval_step, make_loss_fn, make_train_step,
+)
+from repro.train.ddp import make_ddp_steps  # noqa: F401

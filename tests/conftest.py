@@ -1,0 +1,9 @@
+import os
+
+# Tests run single-device (the dry-run owns the 512-device flag; multi-device
+# tests spawn subprocesses with their own XLA_FLAGS).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,151 @@
+"""Attention + recurrent-block numerics: flash custom-vjp vs naive oracle,
+chunked mLSTM vs sequential, RG-LRU associative scan vs stepwise."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.models.attention import chunked_attention, decode_attention
+from repro.models import rglru as rglru_lib
+from repro.models import xlstm as xlstm_lib
+
+
+def naive_attention(q, k, v, kind="causal", window=0):
+    b, sq, h, hd = q.shape
+    _, sk, kvh, _ = k.shape
+    g = h // kvh
+    qg = q.reshape(b, sq, kvh, g, hd)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32) * hd ** -0.5
+    qpos, kpos = jnp.arange(sq), jnp.arange(sk)
+    if kind in ("causal", "swa"):
+        m = kpos[None] <= qpos[:, None]
+        if kind == "swa":
+            m &= kpos[None] > qpos[:, None] - window
+        s = jnp.where(m[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, -1)
+    o = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(v.dtype), v)
+    return o.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, hd)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    kind=st.sampled_from(["causal", "swa", "bidir"]),
+    h=st.sampled_from([4]), kvh=st.sampled_from([1, 2, 4]),
+    chunk=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_flash_matches_naive_fwd(kind, h, kvh, chunk, seed):
+    b, s, hd = 2, 64, 16
+    window = 24
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (b, s, h, hd))
+    k = jax.random.normal(ks[1], (b, s, kvh, hd))
+    v = jax.random.normal(ks[2], (b, s, kvh, hd))
+    out = chunked_attention(q, k, v, kind=kind, window=window,
+                            chunk_q=chunk, chunk_k=chunk)
+    ref = naive_attention(q, k, v, kind, window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("kind,window", [("causal", 0), ("swa", 16)])
+def test_flash_custom_vjp_grads(kind, window):
+    b, s, h, kvh, hd = 2, 64, 4, 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, s, h, hd))
+    k = jax.random.normal(ks[1], (b, s, kvh, hd))
+    v = jax.random.normal(ks[2], (b, s, kvh, hd))
+
+    def f_flash(q, k, v):
+        return jnp.sum(jnp.sin(chunked_attention(
+            q, k, v, kind=kind, window=window, chunk_q=16, chunk_k=16)))
+
+    def f_ref(q, k, v):
+        return jnp.sum(jnp.sin(naive_attention(q, k, v, kind, window)))
+
+    gf = jax.grad(f_flash, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b_ in zip(gf, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   rtol=1e-3, atol=1e-4)
+
+
+def test_flash_traced_offset_matches_static():
+    b, s, h, hd = 1, 32, 2, 8
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (b, s, h, hd))
+    k = jax.random.normal(ks[1], (b, s, h, hd))
+    v = jax.random.normal(ks[2], (b, s, h, hd))
+    a = chunked_attention(q, k, v, kind="causal", chunk_q=8, chunk_k=8)
+    bb = chunked_attention(q, k, v, kind="causal", q_offset=jnp.asarray(0),
+                           chunk_q=8, chunk_k=8, static_offset=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(bb), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_decode_attention_matches_naive_last_row():
+    b, S, h, kvh, hd = 2, 32, 4, 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (b, 1, h, hd))
+    kc = jax.random.normal(ks[1], (b, S, kvh, hd))
+    vc = jax.random.normal(ks[2], (b, S, kvh, hd))
+    out = decode_attention(q, kc, vc, kv_len=20)
+    ref = naive_attention(
+        jnp.concatenate([jnp.zeros((b, 19, h, hd)), q], axis=1),
+        kc[:, :20], vc[:, :20], "causal")[:, -1:]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4,
+                               atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# recurrent blocks
+
+
+def test_mlstm_chunked_matches_sequential():
+    cfg = get_config("xlstm-125m").reduced()
+    key = jax.random.PRNGKey(0)
+    p = xlstm_lib.init_mlstm(key, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, cfg.d_model)) * 0.5
+    y_chunk = xlstm_lib.mlstm_chunked(p, x, cfg, chunk=16)
+    y_seq, _ = xlstm_lib.mlstm_sequential(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_seq),
+                               rtol=5e-4, atol=5e-4)
+
+
+def test_mlstm_state_handoff():
+    """Chunked with carried state == one long chunked run."""
+    cfg = get_config("xlstm-125m").reduced()
+    p = xlstm_lib.init_mlstm(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(2), (1, 64, cfg.d_model)) * 0.5
+    full = xlstm_lib.mlstm_chunked(p, x, cfg, chunk=16)
+    y1, st = xlstm_lib.mlstm_chunked(p, x[:, :32], cfg, chunk=16,
+                                     return_state=True)
+    y2 = xlstm_lib.mlstm_chunked(p, x[:, 32:], cfg, state=st, chunk=16)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(full), rtol=5e-4, atol=5e-4)
+
+
+def test_rglru_scan_matches_stepwise():
+    cfg = get_config("recurrentgemma-2b").reduced()
+    p = rglru_lib.init_rglru(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, cfg.d_model)) * 0.5
+    y = rglru_lib.rglru_block(p, x)
+    h, conv = rglru_lib.init_state(cfg, 2)
+    ys = []
+    for t in range(32):
+        yt, h, conv = rglru_lib.rglru_decode_step(p, x[:, t:t + 1], h, conv)
+        ys.append(yt)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(ys, 1)),
+                               np.asarray(y), rtol=1e-4, atol=1e-4)
+
+
+def test_rglru_stability_long_sequence():
+    """|a_t| < 1 by construction: activations stay bounded over long seqs."""
+    cfg = get_config("recurrentgemma-2b").reduced()
+    p = rglru_lib.init_rglru(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 2048, cfg.d_model))
+    y = rglru_lib.rglru_block(p, x)
+    assert bool(jnp.isfinite(y).all())
+    assert float(jnp.max(jnp.abs(y))) < 1e3

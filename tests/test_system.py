@@ -1,0 +1,132 @@
+"""End-to-end behaviour of the ScaDLES system (paper's headline claims at
+CPU scale): weighted aggregation beats fixed-batch DDL on wall-clock,
+truncation bounds buffers, injection rescues non-IID, adaptive compression
+cuts wire floats without wrecking accuracy."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import PERSISTENCE, TRUNCATION, ScaDLESConfig, ScaDLESTrainer
+from repro.data import ClassClusterData, DeviceDataSource
+
+
+def make_model(d_in=32 * 32 * 3, hidden=64, classes=10):
+    def init(key):
+        k1, k2 = jax.random.split(key)
+        return {"w1": jax.random.normal(k1, (d_in, hidden)) * 0.02,
+                "b1": jnp.zeros(hidden),
+                "w2": jax.random.normal(k2, (hidden, classes)) * 0.02,
+                "b2": jnp.zeros(classes)}
+
+    def per_sample_loss(p, x, y):
+        h = jax.nn.relu(x.reshape(x.shape[0], -1) @ p["w1"] + p["b1"])
+        logits = h @ p["w2"] + p["b2"]
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
+        return lse - gold
+
+    def predict(p, x):
+        h = jax.nn.relu(x.reshape(x.shape[0], -1) @ p["w1"] + p["b1"])
+        return h @ p["w2"] + p["b2"]
+
+    return {"init": init, "per_sample_loss": per_sample_loss,
+            "predict": predict}
+
+
+@pytest.fixture(scope="module")
+def data():
+    return ClassClusterData(num_classes=10, train_per_class=128,
+                            test_per_class=32, noise=0.8, seed=0)
+
+
+def _acc(model, params, data):
+    logits = model["predict"](params, jnp.asarray(data.test_x))
+    return float(np.mean(np.argmax(np.asarray(logits), -1) == data.test_y))
+
+
+def test_scadles_faster_than_ddl_simclock(data):
+    """Weighted aggregation removes streaming waits: wall-clock speedup in
+    the paper's 1.15-3.3x band (S1, CPU-scaled)."""
+    model = make_model()
+    src = DeviceDataSource(data, 8, iid=True)
+    t_sc = ScaDLESTrainer(model, src, ScaDLESConfig(
+        n_devices=8, dist="S1", weighted=True, b_max=64, base_lr=0.05))
+    t_dd = ScaDLESTrainer(model, src, ScaDLESConfig(
+        n_devices=8, dist="S1", weighted=False, b_max=64, base_lr=0.05))
+    t_sc.run(15)
+    t_dd.run(15)
+    a_sc = _acc(model, t_sc.params, data)
+    a_dd = _acc(model, t_dd.params, data)
+    assert a_sc > 0.6 and a_dd > 0.6          # both learn
+    speedup = t_dd.clock.time_s / t_sc.clock.time_s
+    assert speedup > 1.1                       # ScaDLES strictly faster
+
+
+def test_truncation_bounds_buffers(data):
+    model = make_model()
+    src = DeviceDataSource(data, 8, iid=True)
+    pers = ScaDLESTrainer(model, src, ScaDLESConfig(
+        n_devices=8, dist="S2", weighted=False, policy=PERSISTENCE))
+    trun = ScaDLESTrainer(model, src, ScaDLESConfig(
+        n_devices=8, dist="S2", weighted=False, policy=TRUNCATION))
+    pers.run(20)
+    trun.run(20)
+    # O(S·T) vs O(S·t_iter): grows with steps vs constant-per-interval
+    assert pers.summary()["buffer_final"] > 8 * trun.summary()["buffer_final"]
+
+
+def test_injection_improves_representativeness(data):
+    """Injection pulls device-local label distributions toward the global one
+    (the paper's skewness metric, EMD via Zhao et al.) at bounded overhead.
+
+    Fig 2a's accuracy *saturation* needs deep CNN+BN feature learning and is
+    not reproducible at CPU/MLP scale with per-iteration synchronous
+    aggregation (the aggregated gradient stays unbiased) — documented in
+    DESIGN.md §8; the mechanism is validated distributionally instead.
+    """
+    import numpy as np
+    from repro.core.injection import (inject_batches, injection_plan,
+                                      label_emd)
+    src = DeviceDataSource(data, 10, iid=False, labels_per_device=1)
+    rng = np.random.default_rng(0)
+    xs, ys, _ = src.batches(rng, np.full(10, 64), 64)
+    emd_before = label_emd(ys, data.num_classes)
+    senders, n_share = injection_plan(rng, 10, 0.5, 0.5, 64)
+    xs2, ys2, bytes_moved = inject_batches(rng, xs, ys, senders, n_share)
+    emd_after = label_emd(ys2, data.num_classes)
+    assert emd_before > 0.85          # 1 label/device: near-maximal skew
+    assert emd_after < emd_before - 0.1
+    assert 0 < bytes_moved < 10 * 64 * xs.itemsize * xs[0, 0].size
+    # training with injection must not hurt accuracy
+    model = make_model()
+    inj = ScaDLESTrainer(model, src, ScaDLESConfig(
+        n_devices=10, dist="S1p", weighted=True, base_lr=0.03, seed=1,
+        injection=(0.5, 0.5)))
+    inj.run(25)
+    assert _acc(model, inj.params, data) > 0.8
+    assert inj.history[-1]["inj_bytes"] > 0
+
+
+def test_adaptive_compression_reduces_floats(data):
+    model = make_model()
+    src = DeviceDataSource(data, 8, iid=True)
+    comp = ScaDLESTrainer(model, src, ScaDLESConfig(
+        n_devices=8, dist="S1", weighted=True, compression=(0.1, 0.3)))
+    comp.run(25)
+    s = comp.summary()
+    assert s["cnc_ratio"] > 0.5                 # compression engages
+    dense_floats = 25 * comp.n_floats
+    assert s["floats_sent"] / comp.cfg.n_devices < 0.6 * dense_floats
+    a = _acc(model, comp.params, data)
+    assert a > 0.6                              # accuracy survives
+
+
+def test_tight_delta_disables_compression(data):
+    model = make_model()
+    src = DeviceDataSource(data, 4, iid=True)
+    t = ScaDLESTrainer(model, src, ScaDLESConfig(
+        n_devices=4, dist="S1", weighted=True, compression=(0.01, 1e-5)))
+    t.run(10)
+    # paper Table V: CR=0.01 with tight delta never engages compression
+    assert t.summary()["cnc_ratio"] == 0.0
