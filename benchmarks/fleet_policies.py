@@ -1,0 +1,59 @@
+"""Fleet sync policies across device profiles x Table I stream distributions.
+
+The paper's lockstep model cannot express stragglers or churn; this sweep
+quantifies what the fleet engine adds: under a heterogeneous profile
+(``jetson-mixed``, ``phone-flaky``) with churn enabled, backup-workers and
+bounded-staleness cut the simulated wall-clock to the target training loss
+versus the full-sync baseline, at a small participation/accuracy cost.
+
+Rows: fleet_{profile}_{policy}_{dist},us,derived with
+  t_target   — sim seconds until train loss < target (inf if never)
+  speedup_x  — full-sync t_target / this policy's t_target (same profile/dist)
+  acc        — final test accuracy
+  part       — mean fraction of devices whose gradient made each commit
+"""
+import time
+
+from benchmarks.common import emit, run_trainer
+from repro.core import TRUNCATION, ScaDLESConfig
+from repro.fleet import FleetConfig
+
+STEPS = 40
+TARGET = 0.1
+PROFILES = ("k80-uniform", "jetson-mixed", "phone-flaky")
+POLICIES = ("full-sync", "backup-workers", "bounded-staleness")
+DISTS = ("S1", "S1p")
+
+
+def run_one(profile: str, policy: str, dist: str):
+    fleet = FleetConfig(profile=profile, policy=policy, drop_frac=0.25,
+                        staleness_bound=4, churn=(profile != "k80-uniform"))
+    cfg = ScaDLESConfig(n_devices=16, dist=dist, weighted=True,
+                        policy=TRUNCATION, b_max=128, base_lr=0.05,
+                        grad_floats=60.2e6, fleet=fleet)
+    out = run_trainer(cfg, STEPS, loss_target=TARGET)
+    return out
+
+
+def main():
+    for dist in DISTS:
+        for profile in PROFILES:
+            base_t = None
+            for policy in POLICIES:
+                t0 = time.perf_counter()
+                out = run_one(profile, policy, dist)
+                us = (time.perf_counter() - t0) * 1e6
+                t_target = out["time_to_target"]
+                if policy == "full-sync":
+                    base_t = t_target
+                speedup = (base_t / t_target
+                           if base_t and t_target not in (0, float("inf"))
+                           else float("nan"))
+                emit(f"fleet_{profile}_{policy}_{dist}", us,
+                     f"t_target={t_target:.1f};speedup_x={speedup:.2f};"
+                     f"acc={out['acc']:.3f};"
+                     f"part={out['trainer'].summary()['fleet_part_rate']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -3,8 +3,8 @@ import sys
 import traceback
 
 from benchmarks import (buffer_growth, compression, compression_wire,
-                        injection, kernels_bench, overall, roofline,
-                        streaming_latency, weighted_agg)
+                        fleet_policies, injection, kernels_bench, overall,
+                        roofline, streaming_latency, weighted_agg)
 
 MODULES = [
     ("fig1_streaming_latency", streaming_latency),
@@ -13,6 +13,7 @@ MODULES = [
     ("fig9/10_injection", injection),
     ("tab5_compression", compression),
     ("tab6_overall", overall),
+    ("fleet_policies", fleet_policies),
     ("kernels", kernels_bench),
     ("compression_wire", compression_wire),
     ("roofline", roofline),

@@ -49,6 +49,11 @@ class CountingBuffer:
         self.peak = max(self.peak, self.size)
         return self.size
 
+    def clear(self) -> None:
+        """Device crash/restart: queued samples are lost (counted as drops)."""
+        self.total_dropped += self.size
+        self.size = 0.0
+
 
 class SampleBuffer:
     """FIFO of sample ids (ints into the device-local stream ordering)."""
@@ -76,6 +81,11 @@ class SampleBuffer:
         for _ in range(min(int(n), len(self._q))):
             out.append(self._q.popleft())
         return out
+
+    def clear(self) -> None:
+        """Device crash/restart: queued samples are lost (counted as drops)."""
+        self.total_dropped += len(self._q)
+        self._q.clear()
 
     def __len__(self) -> int:
         return len(self._q)

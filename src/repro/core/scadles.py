@@ -51,6 +51,12 @@ class ScaDLESConfig:
     # weight divergence [Zhao et al.] becomes visible at MLP scale and the
     # data-injection rescue is measurable on CPU — DESIGN.md §8)
     local_steps: int = 1
+    # heterogeneous-fleet simulation (repro.fleet.FleetConfig); None keeps the
+    # legacy lockstep EdgeClock fast path.  The fleet engine schedules each
+    # device's stream/compute/comm events independently, applies the sync
+    # policy (full-sync / backup-workers / bounded-staleness) and churn, and
+    # feeds the realised participant set back into the aggregation below.
+    fleet: Optional[Any] = None
     seed: int = 0
     intra_jitter: float = 0.0
     sample_bytes: int = 3072             # 3 KB / CIFAR image (paper Fig 10)
@@ -88,6 +94,21 @@ class ScaDLESTrainer:
         self.actual_floats = int(actual_floats)
         self.prev_iter_time = 1.0
         self.history: List[Dict[str, float]] = []
+        # fleet mode: event-driven heterogeneous clock replaces the lockstep
+        # EdgeClock (lazy import: repro.fleet depends on core.simclock)
+        self.fleet = None
+        self._carry_grads = False
+        if cfg.fleet is not None:
+            from repro import fleet as fleet_lib
+            self.fleet = fleet_lib.FleetEngine(cfg.fleet, self.clock.cfg)
+            self._carry_grads = cfg.fleet.policy == fleet_lib.BOUNDED_STALENESS
+        self._online_frac = np.ones(cfg.n_devices)
+        # bounded staleness: a straggler's gradient commits rounds after it
+        # was computed; keep each device's last *started* (compressed) flat
+        # gradient so late commits aggregate the stale values
+        self._stale_flat = (np.zeros((cfg.n_devices, self.actual_floats),
+                                     np.float32) if self._carry_grads else None)
+        self._stale_valid = np.zeros(cfg.n_devices, bool)
         self._step_fn = self._build_step()
 
     # ------------------------------------------------------------------
@@ -115,8 +136,10 @@ class ScaDLESTrainer:
                 lambda a, b: (a - b) / cfg.base_lr, params, p_new)
             return jnp.mean(losses), pseudo_grad
 
-        @jax.jit
-        def step(params, mom, xs, ys, masks, rates, use_comp):
+        carry = self._carry_grads
+
+        def core(params, mom, xs, ys, masks, rates_eff, agg_w, use_comp,
+                 stale_flat=None, use_stale=None):
             # per-device grads (vmap == synchronous DDP)
             losses, grads = jax.vmap(device_grad, in_axes=(None, 0, 0, 0))(
                 params, xs, ys, masks)
@@ -130,15 +153,20 @@ class ScaDLESTrainer:
             else:
                 gap = jnp.zeros(())
                 flat_used = flat
-            grads = jax.vmap(unflatten)(flat_used)
-            # aggregation: Eqn 4b (weighted) or uniform mean (DDL)
-            if cfg.weighted:
-                g = weighted_aggregate(grads, rates)
+            if carry:
+                # late commits (bounded staleness) aggregate the gradient the
+                # straggler computed when its work started, not this round's
+                flat_agg = jnp.where(use_stale[:, None], stale_flat, flat_used)
             else:
-                g = jax.tree.map(lambda x: jnp.mean(x, axis=0), grads)
-            # linear LR scaling
+                flat_agg = flat_used
+            grads = jax.vmap(unflatten)(flat_agg)
+            # aggregation: Eqn 4b with participation-masked weights — rates
+            # for ScaDLES (weighted), uniform for conventional DDL; a zeroed
+            # weight (dropped straggler / offline device) contributes nothing
+            g = weighted_aggregate(grads, agg_w)
+            # linear LR scaling from the realised (participating) rates
             if cfg.weighted and cfg.linear_lr_scaling:
-                lr = linear_scaled_lr(cfg.base_lr, rates,
+                lr = linear_scaled_lr(cfg.base_lr, rates_eff,
                                       cfg.ddl_batch * cfg.n_devices)
             else:
                 lr = jnp.asarray(cfg.base_lr)
@@ -153,7 +181,24 @@ class ScaDLESTrainer:
                    for m, gg, p in zip(flat_m, flat_g, flat_p)]
             mom = jax.tree.unflatten(tdef, [x[0] for x in new])
             params = jax.tree.unflatten(tdef, [x[1] for x in new])
-            return params, mom, jnp.mean(losses), gap
+            # report loss over devices that actually trained this round
+            has_data = (jnp.sum(masks, axis=1) > 0).astype(losses.dtype)
+            loss = (jnp.sum(losses * has_data)
+                    / jnp.maximum(jnp.sum(has_data), 1.0))
+            return params, mom, loss, gap, flat_used
+
+        if carry:
+            @jax.jit
+            def step(params, mom, xs, ys, masks, rates_eff, agg_w, stale_flat,
+                     use_stale, use_comp):
+                return core(params, mom, xs, ys, masks, rates_eff, agg_w,
+                            use_comp, stale_flat, use_stale)
+        else:
+            @jax.jit
+            def step(params, mom, xs, ys, masks, rates_eff, agg_w, use_comp):
+                out = core(params, mom, xs, ys, masks, rates_eff, agg_w,
+                           use_comp)
+                return out[:4]   # fresh grads need not leave the device
 
         return step
 
@@ -163,16 +208,35 @@ class ScaDLESTrainer:
         cfg = self.cfg
         for t in range(steps):
             rates = self.sim.rates_at(t)
+            # which devices start fresh work this round (fleet: up and not
+            # carrying an in-flight gradient; legacy lockstep: everyone)
+            if self.fleet is not None:
+                avail = self.fleet.active_mask()
+            else:
+                avail = np.ones(cfg.n_devices, bool)
             # batch sizes + streaming waits
+            waits_vec = np.zeros(cfg.n_devices)
             if cfg.weighted:
-                batches = np.clip(rates, cfg.b_min, cfg.b_max)
+                batches = np.clip(rates, cfg.b_min, cfg.b_max) * avail
                 wait = 0.0
             else:
-                batches = np.full(cfg.n_devices, cfg.ddl_batch)
+                batches = np.full(cfg.n_devices, cfg.ddl_batch) * avail
                 queues = np.array([b.size for b in self.buffers])
-                wait = simclock.ddl_streaming_wait(rates, queues, cfg.ddl_batch)
-            # stream in: arrivals during previous iteration (+ wait time)
-            arriving = rates * max(self.prev_iter_time + wait, 1.0)
+                if self.fleet is not None:
+                    # per-device waits: the sync policy decides who is waited
+                    # for (full-sync recovers the legacy max over devices)
+                    waits_vec = np.where(
+                        avail, simclock.ddl_streaming_wait_per_device(
+                            rates, queues, cfg.ddl_batch), 0.0)
+                    wait = float(np.max(waits_vec)) if avail.any() else 0.0
+                else:
+                    wait = simclock.ddl_streaming_wait(rates, queues,
+                                                       cfg.ddl_batch)
+                    waits_vec[:] = wait
+            # stream in: arrivals during previous iteration (+ wait time),
+            # scaled by each device's uptime over that interval
+            arriving = stream_lib.arrivals(
+                rates, self.prev_iter_time + wait, self._online_frac)
             for i, b in enumerate(self.buffers):
                 b.step(float(arriving[i]), float(batches[i]))
             # draw fixed-shape batches with masks
@@ -189,40 +253,101 @@ class ScaDLESTrainer:
             use_comp = bool(self.compressor and
                             self.compressor.ewma.value <= self.compressor.delta
                             and self.compressor.ewma.initialized)
-            self.params, self.momentum_state, loss, gap = self._step_fn(
-                self.params, self.momentum_state, jnp.asarray(xs),
-                jnp.asarray(ys), jnp.asarray(masks, jnp.float32),
-                jnp.asarray(rates, jnp.float32), use_comp)
             if self.compressor:
-                k = self.compressor.k_for(self.n_floats)
-                self.compressor.decide(float(gap))     # EWMA update
-                self.compressor.account(use_comp, self.n_floats)
-                floats_wire = (2 * k if use_comp else self.n_floats)
+                k_wire = self.compressor.k_for(self.n_floats)
+                floats_wire = (2 * k_wire if use_comp else self.n_floats)
             else:
                 floats_wire = self.n_floats
-            dt = self.clock.step(wait_s=wait,
-                                 local_batch=float(np.mean(batches)),
-                                 floats_on_wire=floats_wire,
-                                 extra_bytes=inj_bytes)
-            self.prev_iter_time = dt - wait
-            rec = {"step": t, "loss": float(loss), "sim_time_s": self.clock.time_s,
+            # advance the clock: event-driven fleet round or legacy lockstep.
+            # The fleet round runs first because the realised participant set
+            # (stragglers dropped, crashes, late commits) masks aggregation.
+            fleet_rec = {}
+            if self.fleet is not None:
+                res = self.fleet.round(waits=waits_vec, batches=batches,
+                                       floats_on_wire=floats_wire,
+                                       extra_bytes=inj_bytes)
+                dt = res.dt
+                if self._carry_grads:
+                    # a commit either aggregates fresh work that started this
+                    # round with real data, or carried work whose start-round
+                    # gradient was stored; anything else (e.g. a device that
+                    # started during an engine idle-advance with no batch
+                    # drawn) has no gradient to contribute
+                    fresh_commit = res.part & res.started & (batches > 0)
+                    use_stale = res.part & ~res.started & self._stale_valid
+                    part = fresh_commit | use_stale
+                else:
+                    part = res.part & (batches > 0)
+                self._online_frac = res.online_frac
+                for i in res.interrupted:
+                    if self.fleet.profiles[i].volatile_buffer:
+                        self.buffers[i].clear()
+                fleet_rec = {"n_started": float(res.started.sum()),
+                             "n_part": float(part.sum()),
+                             "n_dropped": float(len(res.dropped)),
+                             "n_crashed": float(len(res.crashed)),
+                             "n_carried": float(len(res.carried))}
+            else:
+                part = avail
+            agg_base = rates.astype(np.float64) if cfg.weighted \
+                else np.ones(cfg.n_devices)
+            agg_w = agg_base * part
+            rates_eff = rates * part
+            step_args = [self.params, self.momentum_state, jnp.asarray(xs),
+                         jnp.asarray(ys), jnp.asarray(masks, jnp.float32),
+                         jnp.asarray(rates_eff, jnp.float32),
+                         jnp.asarray(agg_w, jnp.float32)]
+            if self._carry_grads:
+                step_args += [jnp.asarray(self._stale_flat),
+                              jnp.asarray(use_stale)]
+            self.params, self.momentum_state, loss, gap, *extra = \
+                self._step_fn(*step_args, use_comp)
+            if self._carry_grads:
+                # remember the gradient each starter computed this round; it
+                # is what a late commit will aggregate
+                upd = res.started & (batches > 0)
+                fresh = np.asarray(extra[0])
+                self._stale_flat[upd] = fresh[upd]
+                self._stale_valid[upd] = True
+            if self.compressor:
+                self.compressor.decide(float(gap))     # EWMA update
+                self.compressor.account(use_comp, self.n_floats)
+            if self.fleet is None:
+                dt = self.clock.step(wait_s=wait,
+                                     local_batch=float(np.mean(batches)),
+                                     floats_on_wire=floats_wire,
+                                     extra_bytes=inj_bytes)
+            # clamp: a straggler-dropping policy can commit before the
+            # slowest device's streaming wait elapses (dt < wait); full-sync
+            # always has dt >= wait, so the legacy accounting is unchanged
+            self.prev_iter_time = max(dt - wait, 0.0)
+            rec = {"step": t, "loss": float(loss),
+                   "sim_time_s": self.sim_time_s,
                    "wait_s": wait, "global_batch": float(np.sum(batches)),
                    "buffer_total": float(sum(b.size for b in self.buffers)),
                    "gap": float(gap), "used_comp": float(use_comp),
-                   "floats_wire": float(floats_wire), "inj_bytes": float(inj_bytes)}
+                   "floats_wire": float(floats_wire),
+                   "inj_bytes": float(inj_bytes), **fleet_rec}
             if eval_every and eval_fn and (t + 1) % eval_every == 0:
                 rec.update(eval_fn(self.params))
             self.history.append(rec)
         return self.history
 
+    @property
+    def sim_time_s(self) -> float:
+        return self.fleet.time_s if self.fleet is not None \
+            else self.clock.time_s
+
     # summary metrics ---------------------------------------------------
     def summary(self) -> Dict[str, float]:
         out = {
-            "sim_time_s": self.clock.time_s,
+            "sim_time_s": self.sim_time_s,
             "buffer_peak": float(sum(b.peak for b in self.buffers)),
             "buffer_final": float(sum(b.size for b in self.buffers)),
         }
         if self.compressor:
             out["cnc_ratio"] = self.compressor.cnc_ratio
             out["floats_sent"] = self.compressor.floats_sent * self.cfg.n_devices
+        if self.fleet is not None:
+            out.update(self.fleet.summary())
         return out

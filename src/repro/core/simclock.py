@@ -54,15 +54,25 @@ class EdgeClock:
 
     def step(self, *, wait_s: float, local_batch: float,
              floats_on_wire: float, extra_bytes: float = 0.0) -> float:
+        # injection broadcast bytes ride the same overlay as the allreduce, so
+        # they see the same effective (efficiency-scaled) bandwidth
+        eff_bw = self.cfg.bandwidth_gbps * 1e9 / 8 * self.cfg.bandwidth_efficiency
         dt = (wait_s + self.compute_time(local_batch)
               + self.comm_time(floats_on_wire)
-              + extra_bytes / (self.cfg.bandwidth_gbps * 1e9 / 8))
+              + extra_bytes / eff_bw)
         self.time_s += dt
         return dt
+
+
+def ddl_streaming_wait_per_device(rates: np.ndarray, queues: np.ndarray,
+                                  batch: int) -> np.ndarray:
+    """Seconds each device needs to gather ``batch`` samples (the fleet
+    engine schedules these independently; lockstep takes the max)."""
+    deficit = np.maximum(batch - queues, 0.0)
+    return deficit / np.maximum(rates, 1e-9)
 
 
 def ddl_streaming_wait(rates: np.ndarray, queues: np.ndarray,
                        batch: int) -> float:
     """Wait until the slowest device has gathered ``batch`` samples."""
-    deficit = np.maximum(batch - queues, 0.0)
-    return float(np.max(deficit / np.maximum(rates, 1e-9)))
+    return float(np.max(ddl_streaming_wait_per_device(rates, queues, batch)))

@@ -85,6 +85,19 @@ class StreamSimulator:
         return np.maximum(np.round(r), 1.0).astype(np.int64)
 
 
+def arrivals(rates: np.ndarray, duration: float,
+             online_frac: Optional[np.ndarray] = None) -> np.ndarray:
+    """Samples arriving at each device over ``duration`` seconds.
+
+    ``online_frac`` (from the fleet engine's churn model) scales each device's
+    effective streaming time by the fraction of the interval it was up — a
+    device that was offline half the round gathers half the samples."""
+    out = np.asarray(rates, np.float64) * max(duration, 1.0)
+    if online_frac is not None:
+        out = out * np.asarray(online_frac, np.float64)
+    return out
+
+
 def effective_rate(target: np.ndarray, n_streams: int,
                    broker_capacity: float = 10_000.0) -> np.ndarray:
     """Fig 6: effective rate saturates when aggregate demand exceeds broker

@@ -1,0 +1,220 @@
+"""Discrete-event fleet engine: per-device scheduling under a sync policy.
+
+One engine ``round()`` replaces one legacy ``EdgeClock.step()``.  Instead of a
+single lockstep ``wait + compute + comm`` sum, each device runs its own event
+chain on a shared queue —
+
+    STREAM_READY(T0 + wait_i)
+      -> COMPUTE_DONE(+ compute_sec * b_i / ref * mult_i)
+      -> COMM_DONE(+ ring_bytes / (bw_i * efficiency))
+
+— interleaved with DEVICE_DOWN transitions from the churn model, which kill
+in-flight work (crash).  The sync policy then picks the commit time and the
+participant set from the realised completion times.
+
+Degenerate case: a homogeneous fleet (``k80-uniform``) under ``full-sync``
+with churn off makes every completion identical to the legacy lockstep sum,
+so sim-times reproduce ``EdgeClock`` exactly (tested to 1e-9, required to 1%).
+
+Compute-charging models (``FleetConfig.compute_model``):
+
+* ``lockstep``   — every device is charged the fleet-mean batch, matching the
+  legacy clock's calibrated aggregate model (default for homogeneous fleets);
+* ``per-device`` — each device is charged its own rate-proportional batch
+  (default for heterogeneous fleets, where batch skew is part of the story).
+
+Communication is modelled per link: a device's ring-allreduce share
+(2(N-1)/N * 4G bytes, plus any injection broadcast) crosses its own link at
+``bandwidth_gbps * bandwidth_efficiency`` — under heterogeneous links the
+round becomes slowest-link-bound, which is how a ring actually degrades.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.simclock import EdgeClockConfig
+from repro.fleet import events as ev
+from repro.fleet.devices import (LOCKSTEP, DeviceProfile, FleetConfig,
+                                 link_gbps)
+from repro.fleet.policies import ChurnProcess, SyncPolicy, make_policy
+
+_MAX_IDLE_RETRIES = 1000
+
+
+@dataclasses.dataclass
+class RoundResult:
+    dt: float                 # sim seconds this round took
+    commit_time: float        # absolute sim time of the aggregation commit
+    started: np.ndarray       # bool (D,): began fresh work this round
+    part: np.ndarray          # bool (D,): gradient aggregated at the commit
+    online_frac: np.ndarray   # float (D,): uptime fraction over the round
+    max_wait: float           # realised streaming wait among started devices
+    crashed: List[int]        # lost in-flight work to a mid-round failure
+    dropped: List[int]        # stragglers cancelled by the policy
+    carried: List[int]        # work still in flight past the commit
+    interrupted: List[int]    # any downtime during the round (buffer policy)
+
+
+class FleetEngine:
+    """Event-queue clock for a heterogeneous fleet; one round per train step."""
+
+    def __init__(self, cfg: FleetConfig, base: EdgeClockConfig):
+        self.cfg = cfg
+        self.base = base
+        self.n = base.n_devices
+        self.profiles: List[DeviceProfile] = cfg.resolve_profiles(self.n)
+        self.compute_model = cfg.resolve_compute_model(self.profiles)
+        self.policy: SyncPolicy = make_policy(cfg)
+        self.churn = ChurnProcess(self.profiles, seed=cfg.seed,
+                                  enabled=cfg.churn)
+        self.time_s = 0.0
+        self.busy_until: Dict[int, float] = {}   # in-flight comm-done times
+        self.staleness = np.zeros(self.n, np.int64)
+        # lifetime counters for summaries
+        self.rounds = 0
+        self.total_participants = 0
+        self.total_dropped = 0
+        self.total_crashed = 0
+        self.idle_advances = 0
+
+    # -- per-device timing ------------------------------------------------
+    def device_compute_time(self, i: int, batch: float,
+                            mean_batch: float) -> float:
+        b = mean_batch if self.compute_model == LOCKSTEP else batch
+        return (self.base.compute_sec_per_iter * max(b, 1.0)
+                / self.base.reference_batch * self.profiles[i].compute_mult)
+
+    def device_comm_time(self, i: int, floats_on_wire: float,
+                         extra_bytes: float = 0.0) -> float:
+        ring = 2 * (self.n - 1) / self.n
+        bytes_ = ring * 4.0 * floats_on_wire + extra_bytes
+        eff_bw = (link_gbps(self.profiles[i], self.base.bandwidth_gbps)
+                  * 1e9 / 8 * self.base.bandwidth_efficiency)
+        return bytes_ / eff_bw
+
+    # -- trainer-facing state --------------------------------------------
+    def active_mask(self) -> np.ndarray:
+        """Devices that will start fresh work at the current sim time (up and
+        not still carrying an in-flight gradient)."""
+        t = self.time_s
+        return np.array([self.churn.is_up(i, t) and i not in self.busy_until
+                         for i in range(self.n)])
+
+    # -- the round --------------------------------------------------------
+    def round(self, *, waits: np.ndarray, batches: np.ndarray,
+              floats_on_wire: float, extra_bytes: float = 0.0) -> RoundResult:
+        T0 = self.time_s
+        t_start = T0
+        for retry in range(_MAX_IDLE_RETRIES):
+            completions, started_set, crashed, crash_times = self._try_round(
+                t_start, waits, batches, floats_on_wire, extra_bytes)
+            if completions:
+                break
+            # nobody finished: every starter crashed mid-work and/or the rest
+            # are down.  Advance to the earliest re-admission — after a crash
+            # that is the recovery following the failure — and retry; the gap
+            # (and the wasted attempt) is real sim time.
+            self.idle_advances += 1
+            candidates = []
+            for i in range(self.n):
+                if i in self.busy_until:
+                    continue
+                t_from = crash_times.get(i, t_start) + 1e-9
+                candidates.append(self.churn.next_up_after(i, t_from))
+            t_start = max(min(candidates), t_start + 1e-9)
+        else:
+            raise RuntimeError("fleet made no progress after "
+                               f"{_MAX_IDLE_RETRIES} idle advances")
+        stale = {i: int(self.staleness[i]) for i in completions}
+        plan = self.policy.plan(completions, stale)
+        commit = plan.commit_time
+
+        # bookkeeping: free participants/cancelled/crashed, carry stragglers
+        for i in plan.participants + plan.cancelled + crashed:
+            self.busy_until.pop(i, None)
+        for i in plan.carried:
+            self.busy_until[i] = completions[i]
+        self.staleness[plan.participants] = 0
+        self.staleness[crashed] = 0
+        if plan.carried:
+            self.staleness[plan.carried] += 1
+
+        part = np.zeros(self.n, bool)
+        part[plan.participants] = True
+        started = np.zeros(self.n, bool)
+        started[sorted(started_set)] = True
+        online = np.array([self.churn.up_fraction(i, T0, commit)
+                           for i in range(self.n)])
+        interrupted = [i for i in range(self.n) if online[i] < 1.0 - 1e-12]
+        max_wait = float(np.max(waits[started])) if started.any() else 0.0
+
+        self.time_s = commit
+        self.rounds += 1
+        self.total_participants += len(plan.participants)
+        self.total_dropped += len(plan.cancelled)
+        self.total_crashed += len(crashed)
+        return RoundResult(dt=commit - T0, commit_time=commit,
+                           started=started, part=part, online_frac=online,
+                           max_wait=max_wait, crashed=crashed,
+                           dropped=plan.cancelled, carried=plan.carried,
+                           interrupted=interrupted)
+
+    def _try_round(self, t_start: float, waits, batches, floats_on_wire,
+                   extra_bytes):
+        """Run one round's event chains from ``t_start``; returns
+        (completions, started, crashed, crash_times)."""
+        started = [i for i in range(self.n)
+                   if self.churn.is_up(i, t_start) and i not in self.busy_until]
+        mean_batch = float(np.mean([max(batches[i], 1.0) for i in started])) \
+            if started else 1.0
+        q = ev.EventQueue()
+        for i in started:
+            # a device can drop while still gathering its mini-batch
+            self._advance_or_fail(q, i, t_start, t_start + float(waits[i]),
+                                  ev.STREAM_READY)
+        for i, t_done in self.busy_until.items():
+            # in-flight work was churn-checked through its completion when it
+            # was first scheduled, so it lands unless the policy re-carries it
+            q.push(t_done, ev.COMM_DONE, i)
+
+        completions: Dict[int, float] = {}
+        crashed: List[int] = []
+        crash_times: Dict[int, float] = {}
+        for e in q.drain():
+            if e.kind == ev.STREAM_READY:
+                t_c = e.time + self.device_compute_time(
+                    e.device, float(batches[e.device]), mean_batch)
+                self._advance_or_fail(q, e.device, e.time, t_c,
+                                      ev.COMPUTE_DONE)
+            elif e.kind == ev.COMPUTE_DONE:
+                t_m = e.time + self.device_comm_time(
+                    e.device, floats_on_wire, extra_bytes)
+                self._advance_or_fail(q, e.device, e.time, t_m, ev.COMM_DONE)
+            elif e.kind == ev.COMM_DONE:
+                completions[e.device] = e.time
+            elif e.kind == ev.DEVICE_DOWN:
+                crashed.append(e.device)
+                crash_times[e.device] = e.time
+        return completions, set(started), crashed, crash_times
+
+    def _advance_or_fail(self, q: ev.EventQueue, device: int, t0: float,
+                         t1: float, kind: str) -> None:
+        t_down = self.churn.next_down_in(device, t0, t1)
+        if t_down is None:
+            q.push(t1, kind, device)
+        else:
+            q.push(t_down, ev.DEVICE_DOWN, device)
+
+    # -- reporting --------------------------------------------------------
+    def summary(self) -> Dict[str, float]:
+        rounds = max(self.rounds, 1)
+        return {
+            "fleet_rounds": float(self.rounds),
+            "fleet_part_rate": self.total_participants / (rounds * self.n),
+            "fleet_dropped": float(self.total_dropped),
+            "fleet_crashed": float(self.total_crashed),
+            "fleet_idle_advances": float(self.idle_advances),
+        }

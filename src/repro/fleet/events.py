@@ -1,0 +1,66 @@
+"""Event primitives for the fleet engine's discrete-event clock.
+
+The legacy ``EdgeClock`` advances one lockstep iteration at a time; the fleet
+engine instead schedules *per-device* events on a priority queue and lets the
+sync policy decide when a round commits.  Event kinds:
+
+* ``STREAM_READY``  — device gathered enough streamed samples to start
+  (conventional DDL's per-device streaming wait; 0 for ScaDLES);
+* ``COMPUTE_DONE``  — device finished its local gradient;
+* ``COMM_DONE``     — device's gradient finished crossing its link;
+* ``DEVICE_DOWN`` — a churn-model failure landing before a device's next
+  stage completes, killing its in-flight work (re-admission is scheduled
+  from the churn process's recovery time, not via the queue).
+
+Ordering is total: ties in time break by insertion order (FIFO), so runs are
+deterministic for a fixed seed.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Iterator, List, Optional
+
+STREAM_READY = "stream_ready"
+COMPUTE_DONE = "compute_done"
+COMM_DONE = "comm_done"
+DEVICE_DOWN = "device_down"
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Event:
+    time: float
+    seq: int = dataclasses.field(compare=True)   # FIFO tie-break
+    kind: str = dataclasses.field(compare=False)
+    device: int = dataclasses.field(compare=False)
+
+
+class EventQueue:
+    """Min-heap of events keyed on (time, insertion order)."""
+
+    def __init__(self) -> None:
+        self._heap: List[Event] = []
+        self._seq = itertools.count()
+
+    def push(self, time: float, kind: str, device: int) -> Event:
+        ev = Event(time=float(time), seq=next(self._seq), kind=kind,
+                   device=device)
+        heapq.heappush(self._heap, ev)
+        return ev
+
+    def pop(self) -> Event:
+        return heapq.heappop(self._heap)
+
+    def peek(self) -> Optional[Event]:
+        return self._heap[0] if self._heap else None
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def __bool__(self) -> bool:
+        return bool(self._heap)
+
+    def drain(self) -> Iterator[Event]:
+        while self._heap:
+            yield heapq.heappop(self._heap)

@@ -1,0 +1,192 @@
+"""Synchronization policies + device churn for the fleet engine.
+
+A policy looks at this round's per-device completion times (comm-done, in
+absolute sim seconds) and decides (a) when the aggregation commits, (b) whose
+gradients make it in, and (c) what happens to stragglers:
+
+* ``FullSync``         — the paper's baseline: wait for everyone.
+* ``BackupWorkers``    — drop the slowest ``drop_frac`` of this round's
+  workers (Chen et al.'s backup-workers idea); their work is cancelled and
+  they start fresh next round.
+* ``BoundedStaleness`` — commit once a quorum has arrived; stragglers keep
+  their work in flight and join a later commit, but any device excluded for
+  ``bound`` consecutive rounds is force-waited (SSP-style staleness cap).
+
+``ChurnProcess`` is an alternating-renewal availability model (exponential
+up/down durations per device, independent streams) used by the engine for
+join/leave/crash-mid-round with re-admission.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+from repro.fleet.devices import (BACKUP_WORKERS, BOUNDED_STALENESS, FULL_SYNC,
+                                 DeviceProfile, FleetConfig)
+
+
+@dataclasses.dataclass(frozen=True)
+class CommitPlan:
+    commit_time: float
+    participants: List[int]    # gradients aggregated at commit_time
+    cancelled: List[int]       # work thrown away (restart next round)
+    carried: List[int]         # work still in flight past the commit
+
+
+class SyncPolicy:
+    name: str = "abstract"
+
+    def plan(self, completions: Dict[int, float],
+             staleness: Dict[int, int]) -> CommitPlan:
+        """``completions``: device -> absolute comm-done time for every device
+        with work that will finish (absent = crashed/offline this round).
+        ``staleness``: rounds each of those devices has gone unaggregated."""
+        raise NotImplementedError
+
+
+class FullSync(SyncPolicy):
+    name = FULL_SYNC
+
+    def plan(self, completions, staleness):
+        commit = max(completions.values())
+        return CommitPlan(commit, sorted(completions), [], [])
+
+
+class BackupWorkers(SyncPolicy):
+    """Commit at the ceil((1-drop_frac)*n)-th completion; cancel the rest."""
+    name = BACKUP_WORKERS
+
+    def __init__(self, drop_frac: float = 0.125):
+        if not 0.0 <= drop_frac < 1.0:
+            raise ValueError(f"drop_frac must be in [0, 1), got {drop_frac}")
+        self.drop_frac = drop_frac
+
+    def plan(self, completions, staleness):
+        order = sorted(completions, key=lambda i: (completions[i], i))
+        keep = max(1, math.ceil((1.0 - self.drop_frac) * len(order)))
+        commit = completions[order[keep - 1]]
+        # everyone done by the cutoff participates (ties included)
+        part = [i for i in order if completions[i] <= commit]
+        cancelled = [i for i in order if completions[i] > commit]
+        return CommitPlan(commit, part, cancelled, [])
+
+
+class BoundedStaleness(SyncPolicy):
+    """Commit once ``quorum_frac`` of workers arrive, but never let any
+    device fall more than ``bound`` rounds behind."""
+    name = BOUNDED_STALENESS
+
+    def __init__(self, bound: int = 4, quorum_frac: float = 0.5):
+        if bound < 1:
+            raise ValueError(f"staleness bound must be >= 1, got {bound}")
+        self.bound = bound
+        self.quorum_frac = quorum_frac
+
+    def plan(self, completions, staleness):
+        order = sorted(completions, key=lambda i: (completions[i], i))
+        quorum = max(1, math.ceil(self.quorum_frac * len(order)))
+        commit = completions[order[quorum - 1]]
+        # devices at the staleness bound must be waited for (SSP barrier)
+        overdue = [i for i in order if staleness.get(i, 0) >= self.bound]
+        if overdue:
+            commit = max(commit, max(completions[i] for i in overdue))
+        part = [i for i in order if completions[i] <= commit]
+        carried = [i for i in order if completions[i] > commit]
+        return CommitPlan(commit, part, [], carried)
+
+
+def make_policy(cfg: FleetConfig) -> SyncPolicy:
+    if cfg.policy == FULL_SYNC:
+        return FullSync()
+    if cfg.policy == BACKUP_WORKERS:
+        return BackupWorkers(cfg.drop_frac)
+    if cfg.policy == BOUNDED_STALENESS:
+        return BoundedStaleness(cfg.staleness_bound, cfg.quorum_frac)
+    raise ValueError(f"unknown sync policy {cfg.policy!r}; options: "
+                     f"{[FULL_SYNC, BACKUP_WORKERS, BOUNDED_STALENESS]}")
+
+
+# ---------------------------------------------------------------------------
+# churn
+
+
+class ChurnProcess:
+    """Alternating-renewal up/down schedule, lazily sampled per device.
+
+    Each device draws Exp(mtbf) up-durations and Exp(mttr) down-durations from
+    its own generator (spawned from one seed), so schedules are deterministic
+    regardless of query order.  All devices start up at t=0.
+    """
+
+    def __init__(self, profiles: Sequence[DeviceProfile], seed: int = 0,
+                 enabled: bool = True):
+        self.profiles = list(profiles)
+        self.enabled = enabled
+        seqs = np.random.SeedSequence([seed, 0xC4D2]).spawn(len(profiles))
+        self._rngs = [np.random.default_rng(s) for s in seqs]
+        # per-device transition times: state flips at each time; even index ->
+        # goes down, odd index -> comes back up (devices start up at t=0)
+        self._flips: List[List[float]] = [[] for _ in profiles]
+        self._sampled_until = [0.0 for _ in profiles]
+
+    def _ensure(self, i: int, t: float) -> None:
+        prof = self.profiles[i]
+        if not (self.enabled and prof.can_fail):
+            return
+        rng, flips = self._rngs[i], self._flips[i]
+        while self._sampled_until[i] <= t:
+            up = len(flips) % 2 == 0
+            mean = prof.mtbf_s if up else prof.mttr_s
+            cur = flips[-1] if flips else 0.0
+            flips.append(cur + float(rng.exponential(mean)))
+            self._sampled_until[i] = flips[-1]
+
+    def is_up(self, i: int, t: float) -> bool:
+        if not (self.enabled and self.profiles[i].can_fail):
+            return True
+        self._ensure(i, t)
+        n_before = np.searchsorted(self._flips[i], t, side="right")
+        return int(n_before) % 2 == 0
+
+    def next_down_in(self, i: int, t0: float, t1: float):
+        """First down-transition in (t0, t1], or None.  Assumes up at t0."""
+        if not (self.enabled and self.profiles[i].can_fail):
+            return None
+        self._ensure(i, t1)
+        flips = self._flips[i]
+        k = int(np.searchsorted(flips, t0, side="right"))
+        if k % 2 == 0 and k < len(flips) and flips[k] <= t1:
+            return flips[k]
+        return None
+
+    def next_up_after(self, i: int, t: float) -> float:
+        """Earliest time >= t the device is up (t itself if already up)."""
+        if self.is_up(i, t):
+            return t
+        flips = self._flips[i]
+        k = int(np.searchsorted(flips, t, side="right"))
+        # k is odd (down); the next flip brings it back up
+        self._ensure(i, flips[k] if k < len(flips) else t)
+        return flips[k]
+
+    def up_fraction(self, i: int, t0: float, t1: float) -> float:
+        """Fraction of [t0, t1] the device was up (stream-arrival scaling)."""
+        if t1 <= t0:
+            return 1.0
+        if not (self.enabled and self.profiles[i].can_fail):
+            return 1.0
+        self._ensure(i, t1)
+        flips = self._flips[i]
+        up_time, cur, up = 0.0, t0, self.is_up(i, t0)
+        k = int(np.searchsorted(flips, t0, side="right"))
+        while k < len(flips) and flips[k] < t1:
+            if up:
+                up_time += flips[k] - cur
+            cur, up = flips[k], not up
+            k += 1
+        if up:
+            up_time += t1 - cur
+        return up_time / (t1 - t0)

@@ -30,10 +30,12 @@ from repro.train.step import make_loss_fn
 
 def make_ddp_steps(cfg: ModelConfig, ctx: RunCtx, mesh, opt_update: Callable,
                    lr_schedule: Callable, cr: float,
-                   param_template) -> Tuple[Callable, Callable]:
-    """Returns (dense_step, compressed_step); both share the signature
-    (params, opt_state, batch, rates, step) with params replicated and batch
-    sharded over the mesh's data axes."""
+                   param_template) -> Tuple[Callable, Callable, int, int]:
+    """Returns (dense_step, compressed_step, k, n_floats): the two jitted
+    programs share the signature (params, opt_state, batch, rates, step) with
+    params replicated and batch sharded over the mesh's data axes; ``k`` is
+    the per-device top-k kept by the compressed program and ``n_floats`` the
+    flattened gradient length."""
     dp = tuple(mesh.axis_names)
     loss_fn = make_loss_fn(cfg, ctx)
     flat0, unflatten = comp_lib.flatten_grads(

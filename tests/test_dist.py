@@ -11,8 +11,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.dist.hlo_analysis import CollectiveOp, collective_bytes, roofline
-from repro.dist.hlo_cost import analyze_hlo
+# the distribution-analysis layer is an open ROADMAP item; skip (rather than
+# abort collection of the whole suite) until repro.dist lands
+pytest.importorskip("repro.dist")
+from repro.dist.hlo_analysis import CollectiveOp, collective_bytes, roofline  # noqa: E402
+from repro.dist.hlo_cost import analyze_hlo  # noqa: E402
 
 
 def test_hlo_cost_matches_xla_on_loop_free():

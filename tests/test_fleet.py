@@ -1,0 +1,292 @@
+"""repro.fleet: event queue, presets, churn, sync policies, and the engine's
+degenerate-case equivalence with the legacy lockstep EdgeClock."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.simclock import EdgeClock, EdgeClockConfig
+from repro.fleet import (BackupWorkers, BoundedStaleness, ChurnProcess,
+                         DeviceProfile, EventQueue, FleetConfig, FleetEngine,
+                         FullSync, make_fleet, make_policy)
+from repro.fleet import COMM_DONE, COMPUTE_DONE, STREAM_READY
+
+
+# ---------------------------------------------------------------------------
+# events
+
+
+def test_event_queue_orders_by_time_then_fifo():
+    q = EventQueue()
+    q.push(2.0, COMM_DONE, 0)
+    q.push(1.0, STREAM_READY, 1)
+    q.push(1.0, COMPUTE_DONE, 2)     # same time: FIFO
+    out = list(q.drain())
+    assert [(e.kind, e.device) for e in out] == [
+        (STREAM_READY, 1), (COMPUTE_DONE, 2), (COMM_DONE, 0)]
+    assert not q
+
+
+# ---------------------------------------------------------------------------
+# device profiles / presets
+
+
+def test_presets_deterministic_and_sized():
+    a = make_fleet("jetson-mixed", 9, seed=3)
+    b = make_fleet("jetson-mixed", 9, seed=3)
+    assert len(a) == 9 and a == b
+    assert len({p.compute_mult for p in a}) > 1      # heterogeneous
+    uni = make_fleet("k80-uniform", 4)
+    assert all(p.compute_mult == 1.0 and not p.can_fail for p in uni)
+    flaky = make_fleet("phone-flaky", 4)
+    assert all(p.can_fail and p.volatile_buffer for p in flaky)
+    with pytest.raises(ValueError):
+        make_fleet("no-such-preset", 4)
+
+
+def test_fleet_config_resolution():
+    cfg = FleetConfig(profile="k80-uniform")
+    assert cfg.resolve_compute_model(cfg.resolve_profiles(4)) == "lockstep"
+    cfg2 = FleetConfig(profile="phone-flaky")
+    assert cfg2.resolve_compute_model(cfg2.resolve_profiles(4)) == "per-device"
+    with pytest.raises(ValueError):
+        FleetConfig(profile=[DeviceProfile("x")]).resolve_profiles(2)
+
+
+# ---------------------------------------------------------------------------
+# churn
+
+
+def test_churn_deterministic_and_consistent():
+    profs = make_fleet("phone-flaky", 4, seed=1)
+    c1 = ChurnProcess(profs, seed=7)
+    c2 = ChurnProcess(profs, seed=7)
+    # query in different orders: schedules must agree
+    up1 = [c1.is_up(i, 500.0) for i in range(4)]
+    _ = [c2.up_fraction(i, 0.0, 1000.0) for i in reversed(range(4))]
+    up2 = [c2.is_up(i, 500.0) for i in range(4)]
+    assert up1 == up2
+    for i in range(4):
+        f = c1.up_fraction(i, 0.0, 1000.0)
+        assert 0.0 <= f <= 1.0
+    assert c1.is_up(0, 0.0)                   # everyone starts up
+
+
+def test_churn_disabled_is_always_up():
+    profs = make_fleet("phone-flaky", 3, seed=0)
+    c = ChurnProcess(profs, seed=0, enabled=False)
+    assert all(c.is_up(i, 1e6) for i in range(3))
+    assert c.up_fraction(1, 0.0, 1e6) == 1.0
+    assert c.next_down_in(2, 0.0, 1e6) is None
+
+
+def test_churn_next_up_after_down_period():
+    profs = [DeviceProfile("d", mtbf_s=10.0, mttr_s=10.0)]
+    c = ChurnProcess(profs, seed=0)
+    t_down = c.next_down_in(0, 0.0, 1e5)
+    assert t_down is not None
+    t_up = c.next_up_after(0, t_down + 1e-9)
+    assert t_up > t_down and c.is_up(0, t_up)
+
+
+# ---------------------------------------------------------------------------
+# sync policies (pure plan logic)
+
+COMPLETIONS = {0: 10.0, 1: 11.0, 2: 12.0, 3: 40.0}
+NO_STALE = {i: 0 for i in COMPLETIONS}
+
+
+def test_full_sync_waits_for_everyone():
+    plan = FullSync().plan(COMPLETIONS, NO_STALE)
+    assert plan.commit_time == 40.0
+    assert plan.participants == [0, 1, 2, 3]
+    assert plan.cancelled == [] and plan.carried == []
+
+
+def test_backup_workers_drops_slowest():
+    plan = BackupWorkers(drop_frac=0.25).plan(COMPLETIONS, NO_STALE)
+    assert plan.commit_time == 12.0
+    assert plan.participants == [0, 1, 2]
+    assert plan.cancelled == [3]
+
+
+def test_bounded_staleness_quorum_and_forced_sync():
+    pol = BoundedStaleness(bound=2, quorum_frac=0.5)
+    plan = pol.plan(COMPLETIONS, NO_STALE)
+    assert plan.commit_time == 11.0            # 2-of-4 quorum
+    assert plan.participants == [0, 1]
+    assert plan.carried == [2, 3]
+    # device 3 at the bound forces a full wait for it
+    plan2 = pol.plan(COMPLETIONS, {0: 0, 1: 0, 2: 0, 3: 2})
+    assert plan2.commit_time == 40.0
+    assert plan2.participants == [0, 1, 2, 3]
+
+
+def test_make_policy_rejects_unknown():
+    with pytest.raises(ValueError):
+        make_policy(FleetConfig(policy="gossip"))
+    with pytest.raises(ValueError):
+        BackupWorkers(drop_frac=1.0)
+    with pytest.raises(ValueError):
+        BoundedStaleness(bound=0)
+
+
+# ---------------------------------------------------------------------------
+# engine
+
+
+@pytest.mark.parametrize("bandwidth_gbps", [5.0, 1.0])
+def test_homogeneous_full_sync_matches_edgeclock(bandwidth_gbps):
+    """The degenerate case: identical devices + full-sync must reproduce the
+    legacy lockstep clock (acceptance: within 1%; it is exact) — including
+    at non-default bandwidths, which k80-uniform profiles inherit."""
+    base = EdgeClockConfig(n_devices=16, grad_floats=60.2e6,
+                           bandwidth_gbps=bandwidth_gbps)
+    eng = FleetEngine(FleetConfig(profile="k80-uniform"), base)
+    clk = EdgeClock(base)
+    rng = np.random.default_rng(0)
+    for _ in range(25):
+        waits = rng.uniform(0.0, 3.0, 16)
+        batches = rng.integers(8, 128, 16).astype(float)
+        res = eng.round(waits=waits, batches=batches,
+                        floats_on_wire=60.2e6, extra_bytes=2e6)
+        dt = clk.step(wait_s=float(waits.max()),
+                      local_batch=float(batches.mean()),
+                      floats_on_wire=60.2e6, extra_bytes=2e6)
+        assert res.dt == pytest.approx(dt, rel=1e-9)
+        assert res.part.all() and res.started.all()
+        assert res.max_wait == pytest.approx(float(waits.max()))
+    assert eng.time_s == pytest.approx(clk.time_s, rel=0.01)
+
+
+def test_engine_backup_workers_commits_at_cutoff():
+    profs = [DeviceProfile(f"d{i}", compute_mult=m)
+             for i, m in enumerate([1.0, 1.0, 1.0, 10.0])]
+    base = EdgeClockConfig(n_devices=4, grad_floats=1e6)
+    eng = FleetEngine(FleetConfig(profile=profs, policy="backup-workers",
+                                  drop_frac=0.25), base)
+    full = FleetEngine(FleetConfig(profile=profs), base)
+    b = np.full(4, 64.0)
+    z = np.zeros(4)
+    r_bk = eng.round(waits=z, batches=b, floats_on_wire=1e6)
+    r_fs = full.round(waits=z, batches=b, floats_on_wire=1e6)
+    assert r_bk.dropped == [3]
+    assert r_bk.part.sum() == 3 and not r_bk.part[3]
+    # round no longer bound by the 10x straggler
+    assert r_bk.dt < 0.5 * r_fs.dt
+    # dropped straggler restarts fresh: active again next round
+    assert eng.active_mask().all()
+
+
+def test_engine_bounded_staleness_carries_then_forces():
+    profs = [DeviceProfile(f"d{i}", compute_mult=m)
+             for i, m in enumerate([1.0, 1.0, 1.0, 8.0])]
+    base = EdgeClockConfig(n_devices=4, grad_floats=1e6)
+    eng = FleetEngine(FleetConfig(profile=profs, policy="bounded-staleness",
+                                  staleness_bound=2, quorum_frac=0.5), base)
+    b, z = np.full(4, 64.0), np.zeros(4)
+    participations = []
+    for _ in range(8):
+        act = eng.active_mask()
+        res = eng.round(waits=z, batches=b * act, floats_on_wire=1e6)
+        participations.append(res.part.copy())
+        assert int(eng.staleness.max()) <= 2
+    # the straggler is excluded sometimes but does commit (forced or in time)
+    straggler_part = [p[3] for p in participations]
+    assert not all(straggler_part)
+    assert any(straggler_part)
+
+
+def test_engine_churn_crash_and_idle_advance():
+    profs = [DeviceProfile(f"p{i}", mtbf_s=5.0, mttr_s=20.0,
+                           volatile_buffer=True) for i in range(2)]
+    base = EdgeClockConfig(n_devices=2, grad_floats=60.2e6)
+    eng = FleetEngine(FleetConfig(profile=profs, churn=True, seed=0), base)
+    t_prev = 0.0
+    for _ in range(30):
+        act = eng.active_mask()
+        res = eng.round(waits=np.zeros(2), batches=np.full(2, 64.0) * act,
+                        floats_on_wire=60.2e6)
+        assert eng.time_s > t_prev
+        assert res.part.any()                  # every round commits someone
+        t_prev = eng.time_s
+    s = eng.summary()
+    # MTBF (5 s) << round length (several s): failures must have happened
+    assert s["fleet_crashed"] > 0 or s["fleet_idle_advances"] > 0
+
+
+def test_engine_heterogeneous_links_slowest_bound():
+    profs = [DeviceProfile("fast", bandwidth_gbps=5.0),
+             DeviceProfile("slow", bandwidth_gbps=0.5)]
+    base = EdgeClockConfig(n_devices=2, grad_floats=60.2e6)
+    eng = FleetEngine(FleetConfig(profile=profs), base)
+    res = eng.round(waits=np.zeros(2), batches=np.full(2, 64.0),
+                    floats_on_wire=60.2e6)
+    # full-sync round is bound by the 10x-slower link
+    assert res.dt > 9 * eng.device_comm_time(0, 60.2e6)
+
+
+# ---------------------------------------------------------------------------
+# trainer integration
+
+
+@pytest.fixture(scope="module")
+def small_setup():
+    from repro.data import ClassClusterData, DeviceDataSource
+
+    def make_model(d_in=32 * 32 * 3, hidden=32, classes=10):
+        import jax
+        import jax.numpy as jnp
+
+        def init(key):
+            k1, k2 = jax.random.split(key)
+            return {"w1": jax.random.normal(k1, (d_in, hidden)) * 0.02,
+                    "b1": jnp.zeros(hidden),
+                    "w2": jax.random.normal(k2, (hidden, classes)) * 0.02,
+                    "b2": jnp.zeros(classes)}
+
+        def per_sample_loss(p, x, y):
+            import jax.numpy as jnp
+            h = jax.nn.relu(x.reshape(x.shape[0], -1) @ p["w1"] + p["b1"])
+            logits = h @ p["w2"] + p["b2"]
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
+            return lse - gold
+
+        return {"init": init, "per_sample_loss": per_sample_loss}
+
+    data = ClassClusterData(num_classes=10, train_per_class=48,
+                            test_per_class=8, noise=0.8, seed=0)
+    src = DeviceDataSource(data, 8, iid=True)
+    return make_model(), src
+
+
+def test_trainer_fleet_degenerate_equals_legacy(small_setup):
+    from repro.core import ScaDLESConfig, ScaDLESTrainer
+    model, src = small_setup
+    kw = dict(n_devices=8, dist="S1", weighted=True, b_max=64,
+              grad_floats=60.2e6)
+    legacy = ScaDLESTrainer(model, src, ScaDLESConfig(**kw))
+    fleet = ScaDLESTrainer(model, src, ScaDLESConfig(
+        fleet=FleetConfig(profile="k80-uniform"), **kw))
+    legacy.run(8)
+    fleet.run(8)
+    assert fleet.sim_time_s == pytest.approx(legacy.sim_time_s, rel=0.01)
+    for h_l, h_f in zip(legacy.history, fleet.history):
+        assert h_f["loss"] == pytest.approx(h_l["loss"], rel=1e-4, abs=1e-5)
+
+
+def test_trainer_fleet_policies_run_and_participate(small_setup):
+    from repro.core import ScaDLESConfig, ScaDLESTrainer
+    model, src = small_setup
+    fl = FleetConfig(profile="jetson-mixed", policy="backup-workers",
+                     drop_frac=0.34, churn=True)
+    tr = ScaDLESTrainer(model, src, ScaDLESConfig(
+        n_devices=8, dist="S1", weighted=True, b_max=64,
+        grad_floats=60.2e6, fleet=fl))
+    tr.run(10)
+    s = tr.summary()
+    assert s["fleet_rounds"] == 10
+    assert 0.0 < s["fleet_part_rate"] < 1.0    # stragglers actually dropped
+    assert np.isfinite(tr.history[-1]["loss"])
+    assert all(h["n_part"] >= 1 for h in tr.history)
