@@ -1,11 +1,18 @@
 """Wire-level validation of adaptive compression on the production stack.
 
 Lowers the two DDP programs (dense weighted all-reduce vs compressed
-all-gather of packed top-k) for qwen1.5-0.5B on a 16-way data mesh and
-compares HLO collective bytes — the beyond-paper demonstration that the
-ScaDLES communication rule actually changes what crosses the wire on TPU,
-not just a simulated byte count.  Runs as a subprocess (needs 16 host
-devices).  Results cached to artifacts/perf/compression_wire.json.
+all-gather of packed top-k) for qwen1.5-0.5B and compares HLO collective
+bytes — the beyond-paper demonstration that the ScaDLES communication rule
+actually changes what crosses the wire on TPU, not just a simulated byte
+count.  Each mesh width runs as its own subprocess (the host-device count is
+locked at jax init).  Combos cover the paper's 16-device cluster at the
+adaptive CRs (0.1 / 0.01) plus a 2-device edge pair at cr=0.25, where top-k
+still wins (compressed/dense wire ratio = cr * D, so 0.5x < 0.6x at D=2 but
+>1x at D=16 — exactly the deployment guidance ScaDLES §IV implies).
+
+Results land in artifacts/perf/compression_wire.json.  Set
+SCADLES_WIRE_REDUCED=1 to lower the smoke-scale config instead of the full
+0.5B model (the ratio is size-independent; full-model lowering is slow).
 """
 import json
 import os
@@ -14,9 +21,13 @@ import sys
 
 from benchmarks.common import emit
 
+# (n_devices, [compression ratios])
+COMBOS = [(16, (0.1, 0.01)), (2, (0.25,))]
+
 _SCRIPT = r"""
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%(n)d"
+os.environ.setdefault("JAX_PLATFORMS", "cpu")   # host-device flag is CPU-only
 import json
 import jax, jax.numpy as jnp
 from repro.configs import get_config
@@ -27,61 +38,75 @@ from repro.optim.optimizers import sgdm_init, sgdm_update
 from repro.train.ddp import make_ddp_steps
 
 cfg = get_config("qwen1.5-0.5b")
+if %(reduced)r:
+    cfg = cfg.reduced()
 ctx = RunCtx(remat=True, chunk_q=512, chunk_k=512, loss_chunk=512,
              compute_dtype=jnp.bfloat16, param_dtype=jnp.bfloat16)
 params = jax.eval_shape(lambda k: init_params(k, cfg, dtype=jnp.bfloat16),
                         jax.random.PRNGKey(0))
-mesh = make_test_mesh((16,), ("data",))
+mesh = make_test_mesh((%(n)d,), ("data",))
 opt_update = lambda g, s, p, lr: sgdm_update(g, s, p, lr=lr, momentum=0.9)
+seq = 1024 if not %(reduced)r else 64
+b = 16 * %(n)d
 out = {}
-for cr in (0.1, 0.01):
+for cr in %(crs)r:
     dense_step, comp_step, k, n_floats = make_ddp_steps(
         cfg, ctx, mesh, opt_update, lambda t: 1e-3, cr=cr,
         param_template=params)
-    batch = {"tokens": jax.ShapeDtypeStruct((256, 1024), jnp.int32),
-             "labels": jax.ShapeDtypeStruct((256, 1024), jnp.int32)}
+    batch = {"tokens": jax.ShapeDtypeStruct((b, seq), jnp.int32),
+             "labels": jax.ShapeDtypeStruct((b, seq), jnp.int32)}
     opt = jax.eval_shape(sgdm_init, params)
-    rates = jax.ShapeDtypeStruct((16,), jnp.float32)
+    rates = jax.ShapeDtypeStruct((%(n)d,), jnp.float32)
     step_s = jax.ShapeDtypeStruct((), jnp.int32)
     with jax.set_mesh(mesh):
         for name, fn in (("dense", dense_step), ("compressed", comp_step)):
-            if name == "dense" and cr != 0.1:
-                continue  # dense is CR-independent
+            if name == "dense" and cr != %(crs)r[0]:
+                continue  # dense is CR-independent per mesh
             txt = jax.jit(fn).lower(params, opt, batch, rates,
                                     step_s).compile().as_text()
             w = analyze_hlo(txt)
-            out[f"{name}_cr{cr}"] = {
+            out[f"{name}_d%(n)d_cr{cr}"] = {
                 "collective_bytes": w["collective_bytes"],
-                "flops": w["flops"], "k": k, "n_floats": n_floats}
+                "flops": w["flops"], "k": k, "n_floats": n_floats,
+                "n_devices": %(n)d}
 print(json.dumps(out))
 """
 
 
 def main():
-    cache = "artifacts/perf/compression_wire.json"
+    reduced = bool(os.environ.get("SCADLES_WIRE_REDUCED"))
+    cache = ("artifacts/perf/compression_wire__reduced.json" if reduced
+             else "artifacts/perf/compression_wire.json")
     if not os.path.exists(cache):
         os.makedirs("artifacts/perf", exist_ok=True)
         env = dict(os.environ, PYTHONPATH="src")
-        r = subprocess.run([sys.executable, "-c", _SCRIPT],
-                           capture_output=True, text=True, timeout=1800,
-                           env=env)
-        if r.returncode != 0:
-            emit("compression_wire", 0.0,
-                 "ERROR:" + r.stderr.strip().splitlines()[-1][:120])
-            return
+        env.pop("JAX_PLATFORMS", None)
+        res = {}
+        for n, crs in COMBOS:
+            script = _SCRIPT % {"n": n, "crs": tuple(crs), "reduced": reduced}
+            r = subprocess.run([sys.executable, "-c", script],
+                               capture_output=True, text=True, timeout=1800,
+                               env=env)
+            if r.returncode != 0:
+                tail = (r.stderr or r.stdout).strip().splitlines()[-1:]
+                emit(f"compression_wire_d{n}", 0.0,
+                     "ERROR:" + (tail[0][:120] if tail
+                                 else f"rc={r.returncode}"))
+                return
+            res.update(json.loads(r.stdout.strip().splitlines()[-1]))
         with open(cache, "w") as f:
-            f.write(r.stdout.strip().splitlines()[-1])
+            json.dump(res, f, indent=1)
     res = json.load(open(cache))
-    dense = res["dense_cr0.1"]["collective_bytes"]
+    dense = {v["n_devices"]: v["collective_bytes"]
+             for key, v in res.items() if key.startswith("dense")}
     for key, v in res.items():
         if key.startswith("dense"):
-            emit("wire_dense_allreduce", 0.0,
-                 f"coll_bytes={v['collective_bytes']:.3e}")
+            emit(f"wire_{key}", 0.0, f"coll_bytes={v['collective_bytes']:.3e}")
         else:
-            red = dense / max(v["collective_bytes"], 1)
+            ratio = v["collective_bytes"] / max(dense[v["n_devices"]], 1.0)
             emit(f"wire_{key}", 0.0,
                  f"coll_bytes={v['collective_bytes']:.3e};"
-                 f"reduction_vs_dense={red:.1f}x;k={v['k']}")
+                 f"ratio_vs_dense={ratio:.3f};k={v['k']}")
 
 
 if __name__ == "__main__":

@@ -2,7 +2,9 @@
 
 Reads artifacts/dryrun/*.json and emits one row per (arch x shape x mesh):
 the three roofline terms, the bottleneck, per-chip peak memory, and the
-MODEL_FLOPS/HLO_FLOPS ratio.  EXPERIMENTS.md §Roofline is generated from this.
+MODEL_FLOPS/HLO_FLOPS ratio; the summarised table is also written to
+artifacts/perf/roofline.json.  EXPERIMENTS.md §Roofline is generated from
+this.
 """
 import glob
 import json
@@ -24,6 +26,15 @@ def main():
     if not recs:
         emit("roofline_missing", 0.0, "run repro.launch.sweep first")
         return
+    rows = []
+    for r in recs:
+        rows.append({k: r.get(k) for k in
+                     ("arch", "shape", "mesh", "roofline", "n_micro",
+                      "useful_flops_ratio")}
+                    | {"peak_bytes_est": r["memory"].get("peak_bytes_est", 0)})
+    os.makedirs("artifacts/perf", exist_ok=True)
+    with open("artifacts/perf/roofline.json", "w") as f:
+        json.dump(rows, f, indent=1)
     for r in recs:
         t = r["roofline"]
         emit(f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}",

@@ -1,0 +1,75 @@
+"""Forward-compat shims for older jax (0.4.x) installs.
+
+The distribution layer targets the modern jax surface (``jax.shard_map``,
+``jax.set_mesh``, ``jax.sharding.AxisType``, dict-returning
+``Compiled.cost_analysis``).  Pinned CI and the dev container run jax 0.4.3x,
+where those live under older names; importing this module installs thin,
+behaviour-preserving aliases so one codebase runs on both.  Every shim is a
+no-op on jax versions that already ship the modern API.
+
+Imported for its side effect by ``repro.dist`` and ``repro.train.ddp``::
+
+    import repro.compat  # noqa: F401
+"""
+from __future__ import annotations
+
+import jax
+
+
+def _install_shard_map() -> None:
+    if hasattr(jax, "shard_map"):
+        return
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, mesh=None, in_specs=None, out_specs=None,
+                  check_vma=None, **kwargs):
+        # modern name for the replication check is check_vma; 0.4.x calls it
+        # check_rep
+        if check_vma is not None:
+            kwargs.setdefault("check_rep", check_vma)
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, **kwargs)
+
+    jax.shard_map = shard_map
+
+
+def _install_set_mesh() -> None:
+    if hasattr(jax, "set_mesh"):
+        return
+
+    def set_mesh(mesh):
+        # jax.sharding.Mesh is itself a context manager on 0.4.x, so
+        # ``with jax.set_mesh(mesh):`` degrades to ``with mesh:``
+        return mesh
+
+    jax.set_mesh = set_mesh
+
+
+def _install_cost_analysis_dict() -> None:
+    """0.4.x ``Compiled.cost_analysis()`` returns a one-element list of
+    property dicts; modern jax returns the dict itself."""
+    try:
+        compiled_cls = jax.stages.Compiled
+    except AttributeError:                                # pragma: no cover
+        return
+    orig = compiled_cls.cost_analysis
+    if getattr(orig, "_repro_dict_shim", False):
+        return
+
+    def cost_analysis(self):
+        out = orig(self)
+        if isinstance(out, (list, tuple)):
+            return out[0] if out else {}
+        return out
+
+    cost_analysis._repro_dict_shim = True
+    compiled_cls.cost_analysis = cost_analysis
+
+
+def install() -> None:
+    _install_shard_map()
+    _install_set_mesh()
+    _install_cost_analysis_dict()
+
+
+install()

@@ -1,0 +1,103 @@
+"""Collective-traffic analysis of optimized HLO + the three-term roofline.
+
+``CollectiveOp`` captures one collective instruction as parsed from HLO text:
+its kind, the *result-shape* bytes (what the op materialises per device —
+the full tensor for all-reduce/all-gather, the shard for reduce-scatter) and
+the participant-group size.  ``wire_bytes`` converts that to per-device bytes
+on the wire under the standard ring algorithms:
+
+    all-reduce      2 (D-1)/D * bytes      (reduce-scatter + all-gather)
+    all-gather        (D-1)/D * bytes      (bytes = full gathered tensor)
+    reduce-scatter    (D-1)   * bytes      (bytes = the output shard)
+    all-to-all        (D-1)/D * bytes
+    collective-permute         bytes       (each device forwards its block)
+
+``roofline`` combines walker flops, bytes-accessed and collective wire bytes
+into per-chip seconds against a reference accelerator (TPU v5e-class: 197
+bf16 TFLOP/s, 819 GB/s HBM, 45 GB/s per-chip ICI) and names the bottleneck.
+The same three terms drive ``launch/dryrun.py`` artifacts and
+``benchmarks/roofline.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+# reference accelerator (TPU v5e-class); roofline terms are *relative*
+# rankings, so the exact part only matters for absolute seconds
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BYTES_PER_S = 819e9    # HBM bandwidth per chip
+ICI_BYTES_PER_S = 45e9     # per-chip interconnect bandwidth
+
+_COLLECTIVE_KINDS = ("all-reduce", "all-gather", "reduce-scatter",
+                     "all-to-all", "collective-permute")
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveOp:
+    """One collective as parsed from HLO: (kind, result bytes, group size)."""
+    kind: str
+    bytes: float
+    group_size: int
+
+    @property
+    def wire_bytes(self) -> float:
+        d = max(int(self.group_size), 1)
+        if d <= 1:
+            return 0.0
+        if self.kind.startswith("all-reduce"):
+            return 2.0 * (d - 1) / d * self.bytes
+        if self.kind.startswith("all-gather") or self.kind.startswith("all-to-all"):
+            return (d - 1) / d * self.bytes
+        if self.kind.startswith("reduce-scatter"):
+            return (d - 1) * self.bytes
+        if self.kind.startswith("collective-permute"):
+            return self.bytes
+        return self.bytes
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-kind wire-byte breakdown of every collective in the module.
+
+    Bodies of ``while`` loops are counted ONCE (the static program view);
+    the trip-count-aware total lives in ``hlo_cost.analyze_hlo(...)
+    ["collective_bytes"]`` and is attached as ``total_looped`` by callers
+    that want both (``launch/dryrun.py``).
+    """
+    from repro.dist import hlo_cost  # local: hlo_cost imports CollectiveOp
+
+    module = hlo_cost.parse_module(hlo_text)
+    out: Dict[str, float] = {k: 0.0 for k in _COLLECTIVE_KINDS}
+    count = 0
+    for comp in module.computations.values():
+        for instr in comp:
+            op = hlo_cost.collective_of(instr, module)
+            if op is None:
+                continue
+            base = next(k for k in _COLLECTIVE_KINDS if op.kind.startswith(k))
+            out[base] += op.wire_bytes
+            count += 1
+    out["count"] = float(count)
+    out["total"] = sum(out[k] for k in _COLLECTIVE_KINDS)
+    return out
+
+
+def roofline(flops: float, bytes_accessed: float,
+             wire_bytes: float) -> Dict[str, object]:
+    """Three-term per-chip time model: compute vs HBM vs interconnect."""
+    terms = {
+        "compute_s": flops / PEAK_FLOPS,
+        "memory_s": bytes_accessed / HBM_BYTES_PER_S,
+        "collective_s": wire_bytes / ICI_BYTES_PER_S,
+    }
+    bottleneck = max(terms, key=terms.get)[: -len("_s")]
+    names = {"compute": "compute", "memory": "memory",
+             "collective": "collective"}
+    return dict(terms, bottleneck=names[bottleneck],
+                step_s=max(terms.values()))
+
+
+def model_flops(n_active_params: int, tokens: float, mode: str) -> float:
+    """Reference MODEL_FLOPS: 6ND for train (fwd+bwd), 2ND forward-only."""
+    per_token = 6.0 if mode == "train" else 2.0
+    return per_token * float(n_active_params) * float(tokens)

@@ -134,6 +134,11 @@ class FleetConfig:
     quorum_frac: float = 0.5          # bounded-staleness: commit quorum
     churn: bool = False               # enable the availability model
     compute_model: str = AUTO         # lockstep | per-device | auto
+    # comm-bytes source: None keeps the analytic ring formula (bit-exact with
+    # the legacy EdgeClock under homogeneous full-sync); any object exposing
+    # ``bytes_for(floats_on_wire) -> bytes`` overrides it — repro.dist.
+    # calibrate.CommCalibration supplies one parsed from compiled DDP HLO
+    comm_model: Optional[object] = None
     seed: int = 0
 
     def resolve_profiles(self, n_devices: int) -> List[DeviceProfile]:

@@ -27,6 +27,10 @@ Communication is modelled per link: a device's ring-allreduce share
 (2(N-1)/N * 4G bytes, plus any injection broadcast) crosses its own link at
 ``bandwidth_gbps * bandwidth_efficiency`` — under heterogeneous links the
 round becomes slowest-link-bound, which is how a ring actually degrades.
+``FleetConfig.comm_model`` (e.g. a ``repro.dist.calibrate.CommCalibration``
+parsed from compiled DDP HLO) replaces the analytic byte count with measured
+per-device collective wire bytes; ``None`` keeps the legacy formula and the
+bit-exact EdgeClock equivalence.
 """
 from __future__ import annotations
 
@@ -67,6 +71,13 @@ class FleetEngine:
         self.n = base.n_devices
         self.profiles: List[DeviceProfile] = cfg.resolve_profiles(self.n)
         self.compute_model = cfg.resolve_compute_model(self.profiles)
+        self.comm_model = cfg.comm_model
+        cal_n = getattr(self.comm_model, "n_devices", None)
+        if cal_n is not None and cal_n != self.n:
+            raise ValueError(
+                f"comm_model calibrated for {cal_n} devices but the fleet "
+                f"has {self.n}; recalibrate (repro.dist.calibrate) for this "
+                "device count — ring wire bytes do not transfer across D")
         self.policy: SyncPolicy = make_policy(cfg)
         self.churn = ChurnProcess(self.profiles, seed=cfg.seed,
                                   enabled=cfg.churn)
@@ -89,8 +100,13 @@ class FleetEngine:
 
     def device_comm_time(self, i: int, floats_on_wire: float,
                          extra_bytes: float = 0.0) -> float:
-        ring = 2 * (self.n - 1) / self.n
-        bytes_ = ring * 4.0 * floats_on_wire + extra_bytes
+        if self.comm_model is not None:
+            # calibrated source: per-device collective wire bytes parsed from
+            # the compiled DDP program (repro.dist.calibrate)
+            bytes_ = self.comm_model.bytes_for(floats_on_wire) + extra_bytes
+        else:
+            ring = 2 * (self.n - 1) / self.n
+            bytes_ = ring * 4.0 * floats_on_wire + extra_bytes
         eff_bw = (link_gbps(self.profiles[i], self.base.bandwidth_gbps)
                   * 1e9 / 8 * self.base.bandwidth_efficiency)
         return bytes_ / eff_bw

@@ -3,7 +3,15 @@ module never touches jax device state)."""
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+
+def _mesh(dev_array, axes):
+    try:   # AxisType landed after 0.4.x; older Mesh has no axis_types kwarg
+        from jax.sharding import AxisType
+        return jax.sharding.Mesh(dev_array, axes,
+                                 axis_types=(AxisType.Auto,) * len(axes))
+    except ImportError:
+        return jax.sharding.Mesh(dev_array, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -22,8 +30,7 @@ def make_production_mesh(*, multi_pod: bool = False):
             "any jax import (launch/dryrun.py)")
     import numpy as np
     dev_array = np.asarray(devs[:n]).reshape(shape)
-    return jax.sharding.Mesh(dev_array, axes,
-                             axis_types=(AxisType.Auto,) * len(axes))
+    return _mesh(dev_array, axes)
 
 
 def make_test_mesh(shape=(2, 2), axes=("data", "model")):
@@ -31,5 +38,4 @@ def make_test_mesh(shape=(2, 2), axes=("data", "model")):
     import numpy as np
     n = int(np.prod(shape))
     dev_array = np.asarray(jax.devices()[:n]).reshape(shape)
-    return jax.sharding.Mesh(dev_array, axes,
-                             axis_types=(AxisType.Auto,) * len(axes))
+    return _mesh(dev_array, axes)

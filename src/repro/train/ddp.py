@@ -18,6 +18,8 @@ from __future__ import annotations
 
 from typing import Callable, Dict, Tuple
 
+import repro.compat  # noqa: F401  (jax.shard_map / set_mesh on jax 0.4.x)
+
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P

@@ -1,0 +1,134 @@
+"""repro.dist.calibrate: HLO-sourced fleet comm model.
+
+Fast tests cover the wire-byte model and the engine wiring (legacy analytic
+default stays bit-exact; a calibration-shaped analytic model reproduces it;
+a real CommCalibration redirects comm time to parsed HLO bytes).  The slow
+test lowers the actual DDP programs in a subprocess and checks the
+compressed-vs-dense wire ratio the paper's rule relies on.
+"""
+import numpy as np
+import pytest
+
+from repro.core.simclock import EdgeClock, EdgeClockConfig
+from repro.dist.calibrate import (AnalyticRingModel, CommCalibration,
+                                  calibrate, ring_wire_bytes)
+from repro.dist.hlo_analysis import collective_bytes
+from repro.dist.hlo_cost import analyze_hlo
+from repro.fleet import FleetConfig, FleetEngine
+
+
+def test_comm_calibration_bytes_for():
+    cal = CommCalibration(n_devices=8, n_floats=1000, k=50,
+                          dense_wire_bytes=7000.0,
+                          compressed_wire_bytes=700.0)
+    assert cal.bytes_for(1000) == pytest.approx(7000.0)      # dense program
+    assert cal.bytes_for(100) == pytest.approx(700.0)        # 2k compressed
+    assert cal.bytes_for(50) == pytest.approx(350.0)         # linear in k
+    assert cal.bytes_for(2000) == pytest.approx(14000.0)     # bigger model
+    rt = CommCalibration.from_dict(cal.to_dict())
+    assert rt == cal
+
+
+def _run_rounds(engine, n, rounds=5, floats=2.5e6):
+    dts = []
+    for _ in range(rounds):
+        res = engine.round(waits=np.zeros(n), batches=np.full(n, 64.0),
+                           floats_on_wire=floats, extra_bytes=128.0)
+        dts.append(res.dt)
+    return dts
+
+
+def test_analytic_model_reproduces_legacy_engine():
+    base = EdgeClockConfig(n_devices=4)
+    legacy = FleetEngine(FleetConfig(), base)
+    wrapped = FleetEngine(FleetConfig(comm_model=AnalyticRingModel(4)), base)
+    assert _run_rounds(legacy, 4) == _run_rounds(wrapped, 4)
+    # and the homogeneous full-sync default still matches EdgeClock exactly
+    clock = EdgeClock(EdgeClockConfig(n_devices=4))
+    dt_clock = clock.step(wait_s=0.0, local_batch=64.0, floats_on_wire=2.5e6,
+                          extra_bytes=128.0)
+    assert _run_rounds(FleetEngine(FleetConfig(), base), 4, rounds=1)[0] \
+        == pytest.approx(dt_clock, abs=1e-12)
+
+
+def test_calibrated_engine_charges_hlo_bytes():
+    n, n_floats, k = 4, 1_000_000, 10_000
+    dense_b = ring_wire_bytes(n, n_floats) * 0.9     # "measured" < analytic
+    comp_b = 6.0 * k * (n - 1)                       # all-gathered vals+idx
+    cal = CommCalibration(n_devices=n, n_floats=n_floats, k=k,
+                          dense_wire_bytes=dense_b,
+                          compressed_wire_bytes=comp_b)
+    base = EdgeClockConfig(n_devices=n)
+    eng = FleetEngine(FleetConfig(comm_model=cal), base)
+    eff_bw = base.bandwidth_gbps * 1e9 / 8 * base.bandwidth_efficiency
+    assert eng.device_comm_time(0, n_floats) == pytest.approx(dense_b / eff_bw)
+    assert eng.device_comm_time(0, 2 * k) == pytest.approx(comp_b / eff_bw)
+    legacy = FleetEngine(FleetConfig(), base)
+    assert eng.device_comm_time(0, n_floats) < \
+        legacy.device_comm_time(0, n_floats)
+
+
+_HLO = """\
+HloModule calib_test, num_partitions=4
+
+%add_comp (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(f32[] %a, f32[] %b)
+}
+
+%cond (pc: (s32[], f32[1000])) -> pred[] {
+  %pc = (s32[], f32[1000]{0}) parameter(0)
+  %i = s32[] get-tuple-element((s32[], f32[1000]{0}) %pc), index=0
+  %nn = s32[] constant(5)
+  ROOT %lt = pred[] compare(s32[] %i, s32[] %nn), direction=LT
+}
+
+%body (pb: (s32[], f32[1000])) -> (s32[], f32[1000]) {
+  %pb = (s32[], f32[1000]{0}) parameter(0)
+  %j = s32[] get-tuple-element((s32[], f32[1000]{0}) %pb), index=0
+  %g = f32[1000]{0} get-tuple-element((s32[], f32[1000]{0}) %pb), index=1
+  %ar = f32[1000]{0} all-reduce(f32[1000]{0} %g), replica_groups={{0,1,2,3}}, to_apply=%add_comp
+  %one = s32[] constant(1)
+  %j2 = s32[] add(s32[] %j, s32[] %one)
+  ROOT %t = (s32[], f32[1000]{0}) tuple(s32[] %j2, f32[1000]{0} %ar)
+}
+
+ENTRY %main (x: f32[1000]) -> f32[1000] {
+  %x = f32[1000]{0} parameter(0)
+  %c0 = s32[] constant(0)
+  %t0 = (s32[], f32[1000]{0}) tuple(s32[] %c0, f32[1000]{0} %x)
+  %w = (s32[], f32[1000]{0}) while((s32[], f32[1000]{0}) %t0), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"5"}}
+  ROOT %out = f32[1000]{0} get-tuple-element((s32[], f32[1000]{0}) %w), index=1
+}
+"""
+
+
+def test_wire_bytes_from_hlo_text_respects_trip_count():
+    # one f32[1000] all-reduce over a 4-group: 2*(3/4)*4000 B on the wire
+    once = collective_bytes(_HLO)
+    assert once["all-reduce"] == pytest.approx(6000.0)
+    assert once["total"] == pytest.approx(6000.0)
+    assert once["count"] == 1.0
+    # the walker multiplies the while body by its annotated 5 trips
+    walked = analyze_hlo(_HLO)
+    assert walked["collective_bytes"] == pytest.approx(5 * 6000.0)
+
+
+@pytest.mark.slow
+def test_calibrate_subprocess_wire_ratio(tmp_path):
+    """Lower the real dense/compressed DDP programs on 2 host devices: at
+    cr=0.25 the compressed program must move < 0.6x the dense bytes."""
+    cal = calibrate("qwen1.5-0.5b", n_devices=2, cr=0.25, reduced=True,
+                    cache_dir=str(tmp_path), repo_root=".")
+    assert cal.n_devices == 2
+    assert cal.k == int(0.25 * cal.n_floats)
+    assert cal.dense_wire_bytes > 0
+    ratio = cal.compressed_wire_bytes / cal.dense_wire_bytes
+    assert ratio < 0.6, ratio
+    # and the fleet engine sources its comm time from these bytes
+    eng = FleetEngine(FleetConfig(comm_model=cal),
+                      EdgeClockConfig(n_devices=2))
+    t_dense = eng.device_comm_time(0, cal.n_floats)
+    t_comp = eng.device_comm_time(0, 2 * cal.k)
+    assert t_comp < 0.6 * t_dense
