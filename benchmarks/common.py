@@ -1,8 +1,12 @@
-"""Shared benchmark scaffolding: CSV emission + the small training setup used
-by the paper-reproduction benchmarks (MLP on class-clustered data, 8-16
-simulated edge devices — the CPU-scale stand-in for ResNet152/VGG19+CIFAR)."""
+"""Shared benchmark scaffolding: CSV emission, JSON artifact writing + the
+small training setup used by the paper-reproduction benchmarks (MLP on
+class-clustered data, 8-16 simulated edge devices — the CPU-scale stand-in
+for ResNet152/VGG19+CIFAR)."""
 from __future__ import annotations
 
+import json
+import math
+import os
 import time
 from typing import Callable, Dict, List
 
@@ -20,6 +24,24 @@ def emit(name: str, us_per_call: float, derived: str = ""):
     row = f"{name},{us_per_call:.2f},{derived}"
     ROWS.append(row)
     print(row, flush=True)
+
+
+def write_json_artifact(path: str, payload: Dict) -> None:
+    """Write a benchmark result payload as strict JSON (CI uploads these):
+    non-finite floats (never-reached targets, undefined speedups) become
+    null, anywhere in the payload."""
+    def clean(v):
+        if isinstance(v, float) and not math.isfinite(v):
+            return None
+        if isinstance(v, dict):
+            return {k: clean(x) for k, x in v.items()}
+        if isinstance(v, (list, tuple)):
+            return [clean(x) for x in v]
+        return v
+
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(clean(payload), f, indent=1)
 
 
 def timeit(fn: Callable, n: int = 5, warmup: int = 2) -> float:

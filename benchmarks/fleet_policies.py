@@ -11,10 +11,13 @@ Rows: fleet_{profile}_{policy}_{dist},us,derived with
   speedup_x  — full-sync t_target / this policy's t_target (same profile/dist)
   acc        — final test accuracy
   part       — mean fraction of devices whose gradient made each commit
+
+The same rows land machine-readable in ``artifacts/fleet/fleet_policies.json``
+so the perf trajectory is diffable across commits (CI uploads it).
 """
 import time
 
-from benchmarks.common import emit, run_trainer
+from benchmarks.common import emit, run_trainer, write_json_artifact
 from repro.core import TRUNCATION, ScaDLESConfig
 from repro.fleet import FleetConfig
 
@@ -36,6 +39,7 @@ def run_one(profile: str, policy: str, dist: str):
 
 
 def main():
+    rows = []
     for dist in DISTS:
         for profile in PROFILES:
             base_t = None
@@ -49,10 +53,22 @@ def main():
                 speedup = (base_t / t_target
                            if base_t and t_target not in (0, float("inf"))
                            else float("nan"))
+                s = out["trainer"].summary()
                 emit(f"fleet_{profile}_{policy}_{dist}", us,
                      f"t_target={t_target:.1f};speedup_x={speedup:.2f};"
                      f"acc={out['acc']:.3f};"
-                     f"part={out['trainer'].summary()['fleet_part_rate']:.2f}")
+                     f"part={s['fleet_part_rate']:.2f}")
+                rows.append({
+                    "profile": profile, "policy": policy, "dist": dist,
+                    "t_target_s": t_target, "speedup_vs_full_sync": speedup,
+                    "acc": out["acc"], "part_rate": s["fleet_part_rate"],
+                    "sim_time_s": s["sim_time_s"],
+                    "mean_staleness": s["fleet_mean_staleness"],
+                    "crashed": s["fleet_crashed"],
+                    "dropped": s["fleet_dropped"],
+                })
+    write_json_artifact("artifacts/fleet/fleet_policies.json",
+                        {"steps": STEPS, "loss_target": TARGET, "rows": rows})
 
 
 if __name__ == "__main__":

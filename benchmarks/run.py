@@ -4,7 +4,8 @@ import traceback
 
 from benchmarks import (buffer_growth, compression, compression_wire,
                         fleet_policies, injection, kernels_bench, overall,
-                        roofline, streaming_latency, weighted_agg)
+                        roofline, staleness_sweep, streaming_latency,
+                        weighted_agg)
 
 MODULES = [
     ("fig1_streaming_latency", streaming_latency),
@@ -14,6 +15,7 @@ MODULES = [
     ("tab5_compression", compression),
     ("tab6_overall", overall),
     ("fleet_policies", fleet_policies),
+    ("staleness_sweep", staleness_sweep),
     ("kernels", kernels_bench),
     ("compression_wire", compression_wire),
     ("roofline", roofline),

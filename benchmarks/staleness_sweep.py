@@ -1,0 +1,92 @@
+"""Staleness-vs-throughput study: relaxed-consistency fleet rounds vs the
+paper's synchronous baseline.
+
+ScaDLES inherits synchronous SGD from the paper's setup, so one slow device
+(low stream rate, weak SoC, thin link) gates every commit.  The fleet
+engine's relaxed policies trade gradient *freshness* for commit *throughput*:
+
+* ``full-sync``   — the baseline barrier (staleness 0 by construction);
+* ``semi-sync``   — commit every K arrivals (K-batch barrier groups);
+* ``async``       — commit every arrival (ADSP-style relaxed consistency).
+
+Each policy runs the same weighted-aggregation trainer on the same stream
+distribution; relaxed commits evaluate gradients at the parameter snapshot
+the device actually read (trainer version ring) with 1/(1+s) damping.  Rows
+report the simulated seconds to the training-loss target, the commit
+throughput, and the realised mean/max gradient staleness — the
+staleness-vs-throughput frontier.  Steps are scaled per policy so every mode
+sees a comparable number of *gradients* (an async commit carries one).
+
+Results land in ``artifacts/fleet/staleness_sweep.json``.
+"""
+import time
+
+from benchmarks.common import emit, run_trainer, write_json_artifact
+from repro.core import TRUNCATION, ScaDLESConfig
+from repro.fleet import FleetConfig
+
+N_DEVICES = 16
+TARGET = 0.1
+DIST = "S1"
+PRESETS = ("k80-uniform", "jetson-mixed", "phone-flaky")
+# (policy, trainer steps, FleetConfig overrides): commits carry ~n_devices /
+# ~K / ~1 gradients respectively, so steps scale inversely to keep the total
+# gradient budget comparable
+POLICIES = (
+    ("full-sync", 40, {}),
+    ("semi-sync", 100, {"semi_sync_k": 8}),
+    ("async", 400, {}),
+)
+
+
+def run_one(preset: str, policy: str, steps: int, overrides: dict):
+    fleet = FleetConfig(profile=preset, policy=policy,
+                        churn=(preset != "k80-uniform"), **overrides)
+    cfg = ScaDLESConfig(n_devices=N_DEVICES, dist=DIST, weighted=True,
+                        policy=TRUNCATION, b_max=128, base_lr=0.05,
+                        grad_floats=60.2e6, fleet=fleet)
+    out = run_trainer(cfg, steps, loss_target=TARGET)
+    s = out["trainer"].summary()
+    return {
+        "preset": preset,
+        "policy": policy,
+        "steps": steps,
+        "t_target_s": out["time_to_target"],
+        "sim_time_s": s["sim_time_s"],
+        "acc": out["acc"],
+        "commits": s["fleet_version"],
+        "commits_per_sim_s": s["fleet_version"] / max(s["sim_time_s"], 1e-9),
+        "part_rate": s["fleet_part_rate"],
+        "mean_staleness": s["fleet_mean_staleness"],
+        "max_staleness": s["fleet_max_staleness"],
+    }
+
+
+def main():
+    rows = []
+    for preset in PRESETS:
+        base_t = None
+        for policy, steps, overrides in POLICIES:
+            t0 = time.perf_counter()
+            row = run_one(preset, policy, steps, overrides)
+            us = (time.perf_counter() - t0) * 1e6
+            if policy == "full-sync":
+                base_t = row["t_target_s"]
+            row["speedup_vs_full_sync"] = (
+                base_t / row["t_target_s"]
+                if base_t and row["t_target_s"] not in (0, float("inf"))
+                else float("nan"))
+            rows.append(row)
+            emit(f"staleness_{preset}_{policy}", us,
+                 f"t_target={row['t_target_s']:.1f};"
+                 f"speedup_x={row['speedup_vs_full_sync']:.2f};"
+                 f"mean_stale={row['mean_staleness']:.2f};"
+                 f"max_stale={row['max_staleness']:.0f};"
+                 f"acc={row['acc']:.3f}")
+    write_json_artifact("artifacts/fleet/staleness_sweep.json",
+                        {"n_devices": N_DEVICES, "dist": DIST,
+                         "loss_target": TARGET, "rows": rows})
+
+
+if __name__ == "__main__":
+    main()

@@ -38,16 +38,28 @@ class CountingBuffer:
     peak: float = 0.0
     total_streamed: float = 0.0
     total_dropped: float = 0.0
+    total_consumed: float = 0.0
 
     def step(self, streamed: float, consumed: float) -> float:
         """One iteration: ``streamed`` samples arrive, ``consumed`` trained on."""
         self.total_streamed += streamed
-        self.size = max(0.0, self.size + streamed - consumed)
+        consumed = min(consumed, self.size + streamed)
+        self.total_consumed += consumed
+        self.size = self.size + streamed - consumed
         if self.policy == TRUNCATION and self.size > streamed:
             self.total_dropped += self.size - streamed
             self.size = streamed
         self.peak = max(self.peak, self.size)
         return self.size
+
+    def refund(self, n: float) -> None:
+        """Return ``n`` samples debited for work that was thrown away (a
+        crashed device or a straggler cancelled by the sync policy): the
+        samples were never trained on, so they go back on the queue.  Under
+        truncation the next ``step`` re-applies the size cap."""
+        self.total_consumed -= n
+        self.size += n
+        self.peak = max(self.peak, self.size)
 
     def clear(self) -> None:
         """Device crash/restart: queued samples are lost (counted as drops)."""

@@ -15,6 +15,7 @@ integrates the same mechanisms into shard_map for the architecture zoo.
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 from functools import partial
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -54,9 +55,21 @@ class ScaDLESConfig:
     # heterogeneous-fleet simulation (repro.fleet.FleetConfig); None keeps the
     # legacy lockstep EdgeClock fast path.  The fleet engine schedules each
     # device's stream/compute/comm events independently, applies the sync
-    # policy (full-sync / backup-workers / bounded-staleness) and churn, and
-    # feeds the realised participant set back into the aggregation below.
+    # policy (full-sync / backup-workers / bounded-staleness / semi-sync /
+    # async) and churn, and feeds the realised participant set back into the
+    # aggregation below.
     fleet: Optional[Any] = None
+    # relaxed-consistency commits (bounded-staleness / semi-sync / async):
+    # how many recent parameter snapshots to keep so a stale commit's gradient
+    # is evaluated at the model version the device actually read.  A commit
+    # whose read version fell off the ring aggregates with weight 0.  None
+    # auto-sizes to max(8, 4*n_devices): steady-state async staleness is
+    # ~n_devices per commit cycle (a device misses every other device's
+    # commit), so the ring must comfortably cover a few cycles
+    param_ring: Optional[int] = None
+    # damp a stale gradient's aggregation weight by 1/(1+s), s = commits the
+    # participant's model view is behind (async-SGD staleness compensation)
+    staleness_damping: bool = True
     seed: int = 0
     intra_jitter: float = 0.0
     sample_bytes: int = 3072             # 3 KB / CIFAR image (paper Fig 10)
@@ -101,14 +114,28 @@ class ScaDLESTrainer:
         if cfg.fleet is not None:
             from repro import fleet as fleet_lib
             self.fleet = fleet_lib.FleetEngine(cfg.fleet, self.clock.cfg)
-            self._carry_grads = cfg.fleet.policy == fleet_lib.BOUNDED_STALENESS
+            self._carry_grads = cfg.fleet.policy in fleet_lib.CARRY_POLICIES
         self._online_frac = np.ones(cfg.n_devices)
-        # bounded staleness: a straggler's gradient commits rounds after it
-        # was computed; keep each device's last *started* (compressed) flat
-        # gradient so late commits aggregate the stale values
-        self._stale_flat = (np.zeros((cfg.n_devices, self.actual_floats),
-                                     np.float32) if self._carry_grads else None)
-        self._stale_valid = np.zeros(cfg.n_devices, bool)
+        # relaxed-consistency commits (bounded-staleness / semi-sync / async):
+        # a straggler's gradient commits rounds after its work started, and
+        # must be evaluated at the parameters the device *read* — not the
+        # current ones.  A bounded ring of flat parameter snapshots, keyed by
+        # the engine's model version, supplies those stale params; each
+        # device's start-round batch (and streaming rate) is kept pending so
+        # the late gradient is recomputed exactly as the device would have.
+        if self._carry_grads:
+            from jax.flatten_util import ravel_pytree
+            flat0, self._unravel_params = ravel_pytree(self.params)
+            self._flat_dtype = np.asarray(flat0).dtype
+            self._param_ring: "OrderedDict[int, np.ndarray]" = OrderedDict()
+            self._ring_depth = (max(int(cfg.param_ring), 1)
+                                if cfg.param_ring is not None
+                                else max(8, 4 * cfg.n_devices))
+            self._pending_batch = None           # (xs, ys, masks) np arrays
+            self._pending_rates = np.zeros(cfg.n_devices)
+            self._pending_valid = np.zeros(cfg.n_devices, bool)
+            self._pending_debit = np.zeros(cfg.n_devices)   # buffer samples
+            self._pending_comp = np.zeros(cfg.n_devices, bool)  # use_comp
         self._step_fn = self._build_step()
 
     # ------------------------------------------------------------------
@@ -139,11 +166,21 @@ class ScaDLESTrainer:
         carry = self._carry_grads
 
         def core(params, mom, xs, ys, masks, rates_eff, agg_w, use_comp,
-                 stale_flat=None, use_stale=None):
-            # per-device grads (vmap == synchronous DDP)
-            losses, grads = jax.vmap(device_grad, in_axes=(None, 0, 0, 0))(
-                params, xs, ys, masks)
-            # optional compression of each device's gradient
+                 dev_params=None, part_f=None):
+            # per-device grads (vmap == synchronous DDP).  Relaxed modes map
+            # over a per-device parameter axis as well: a stale committer's
+            # gradient is evaluated at the snapshot of the model version it
+            # actually read (supplied from the trainer's parameter ring).
+            if dev_params is None:
+                losses, grads = jax.vmap(device_grad, in_axes=(None, 0, 0, 0))(
+                    params, xs, ys, masks)
+            else:
+                losses, grads = jax.vmap(device_grad, in_axes=(0, 0, 0, 0))(
+                    dev_params, xs, ys, masks)
+            # optional compression of each device's gradient.  Relaxed modes
+            # pass a per-device (D, 1) decision vector: a late commit replays
+            # the compression choice of its *start* round — the round whose
+            # floats_on_wire the engine already charged for its send
             flat, unflatten = comp_lib.flatten_stacked_grads(grads)  # (D, n)
             if cfg.compression:
                 comp = jax.vmap(
@@ -153,17 +190,12 @@ class ScaDLESTrainer:
             else:
                 gap = jnp.zeros(())
                 flat_used = flat
-            if carry:
-                # late commits (bounded staleness) aggregate the gradient the
-                # straggler computed when its work started, not this round's
-                flat_agg = jnp.where(use_stale[:, None], stale_flat, flat_used)
-            else:
-                flat_agg = flat_used
-            grads = jax.vmap(unflatten)(flat_agg)
+            grads = jax.vmap(unflatten)(flat_used)
             # aggregation: Eqn 4b with participation-masked weights — rates
             # for ScaDLES (weighted), uniform for conventional DDL; a zeroed
-            # weight (dropped straggler / offline device) contributes nothing
-            g = weighted_aggregate(grads, agg_w)
+            # weight (dropped straggler / offline device) contributes nothing.
+            # Relaxed modes pass pre-normalized, staleness-damped weights.
+            g = weighted_aggregate(grads, agg_w, normalize=dev_params is None)
             # linear LR scaling from the realised (participating) rates
             if cfg.weighted and cfg.linear_lr_scaling:
                 lr = linear_scaled_lr(cfg.base_lr, rates_eff,
@@ -181,26 +213,116 @@ class ScaDLESTrainer:
                    for m, gg, p in zip(flat_m, flat_g, flat_p)]
             mom = jax.tree.unflatten(tdef, [x[0] for x in new])
             params = jax.tree.unflatten(tdef, [x[1] for x in new])
-            # report loss over devices that actually trained this round
+            # report loss over devices that actually trained this round (in
+            # relaxed modes: over this commit's participants only)
             has_data = (jnp.sum(masks, axis=1) > 0).astype(losses.dtype)
+            if part_f is not None:
+                has_data = has_data * part_f
             loss = (jnp.sum(losses * has_data)
                     / jnp.maximum(jnp.sum(has_data), 1.0))
-            return params, mom, loss, gap, flat_used
+            return params, mom, loss, gap
 
         if carry:
+            unravel = self._unravel_params
+
             @jax.jit
-            def step(params, mom, xs, ys, masks, rates_eff, agg_w, stale_flat,
-                     use_stale, use_comp):
+            def step(params, mom, dev_flat, xs, ys, masks, part_f, rates_eff,
+                     agg_w, use_comp):
+                dev_params = jax.vmap(unravel)(dev_flat)
                 return core(params, mom, xs, ys, masks, rates_eff, agg_w,
-                            use_comp, stale_flat, use_stale)
+                            use_comp[:, None], dev_params=dev_params,
+                            part_f=part_f)
         else:
             @jax.jit
             def step(params, mom, xs, ys, masks, rates_eff, agg_w, use_comp):
-                out = core(params, mom, xs, ys, masks, rates_eff, agg_w,
-                           use_comp)
-                return out[:4]   # fresh grads need not leave the device
+                return core(params, mom, xs, ys, masks, rates_eff, agg_w,
+                            use_comp)
 
         return step
+
+    # -- relaxed-consistency commit machinery ---------------------------
+    def _ring_push(self, version: int) -> None:
+        """Snapshot current params under ``version``, evicting the oldest."""
+        from jax.flatten_util import ravel_pytree
+        self._param_ring[version] = np.asarray(ravel_pytree(self.params)[0],
+                                               self._flat_dtype)
+        while len(self._param_ring) > self._ring_depth:
+            self._param_ring.popitem(last=False)
+
+    def _ring_params(self, read_version: np.ndarray):
+        """Per-device stale params (D, n) from the ring, plus a bool mask of
+        devices whose read version has been evicted (too stale to apply)."""
+        newest = next(reversed(self._param_ring))
+        rows, evicted = [], np.zeros(self.cfg.n_devices, bool)
+        for i in range(self.cfg.n_devices):
+            row = self._param_ring.get(int(read_version[i]))
+            if row is None:
+                row = self._param_ring[newest]
+                evicted[i] = True
+            rows.append(row)
+        return np.stack(rows), evicted
+
+    def _plan_carry_commit(self, res, batches, rates, xs, ys, masks, debited,
+                           use_comp):
+        """Assemble the step args for a relaxed-consistency commit: update
+        the pending store with this round's fresh starters, look up each
+        committer's read-version params in the ring, and build the
+        staleness-damped aggregation weights.  Returns (part, step_args)."""
+        cfg = self.cfg
+        started_data = res.started & (batches > 0)
+        if self._pending_batch is None:
+            self._pending_batch = [np.zeros_like(np.asarray(a))
+                                   for a in (xs, ys, masks)]
+        for store, new in zip(self._pending_batch, (xs, ys, masks)):
+            store[started_data] = np.asarray(new)[started_data]
+        self._pending_rates[started_data] = rates[started_data]
+        self._pending_valid[started_data] = True
+        self._pending_valid[res.crashed] = False
+        self._pending_debit[started_data] = debited[started_data]
+        self._pending_comp[started_data] = use_comp
+        dev_flat, evicted = self._ring_params(self.fleet.read_version)
+        # devices with live pending work this round (committers included):
+        # the basis for the fleet-wide LR scaling below
+        active = self._pending_valid.copy()
+        # a commit contributes iff its start-round batch exists and the
+        # params it read are still in the ring (the ring bounds how stale an
+        # applied gradient can ever be)
+        part = res.part & active & ~evicted
+        # a committer zero-weighted by ring eviction loses its gradient, not
+        # its samples: refund the debit from its start round
+        for i in np.flatnonzero(res.part & active & evicted):
+            self.buffers[i].refund(self._pending_debit[i])
+        # the engine freed every res.part device — their pending work is
+        # consumed (trained) or discarded (refunded above) exactly once
+        self._pending_valid[res.part] = False
+        self._pending_debit[res.part] = 0.0
+        stale = np.maximum(res.staleness, 0)
+        agg_base = (self._pending_rates.astype(np.float64) if cfg.weighted
+                    else np.ones(cfg.n_devices))
+        w = agg_base * part
+        total = w.sum()
+        if total > 0:
+            w = w / total
+        if cfg.staleness_damping:
+            # staleness-aware async SGD (Zhang et al.-style eta/tau): damp
+            # each gradient post-normalization, so a lone async committer
+            # keeps the 1/(1+s) factor.  With the fleet-wide LR below this
+            # makes every policy cycle-equivalent to synchronous SGD: steady
+            # -state staleness is ~(commits per device cycle - 1), so the
+            # damping exactly compensates the higher commit frequency.
+            w = w / (1.0 + stale)
+        # linear LR scaling sees the whole fleet's realised rates, not just
+        # this commit's participants: the commit frequency already scales
+        # with participation, and the damping handles the staleness
+        rates_eff = self._pending_rates * active
+        px, py, pm = self._pending_batch
+        return part, [self.params, self.momentum_state, jnp.asarray(dev_flat),
+                      jnp.asarray(px), jnp.asarray(py),
+                      jnp.asarray(pm, jnp.float32),
+                      jnp.asarray(part, jnp.float32),
+                      jnp.asarray(rates_eff, jnp.float32),
+                      jnp.asarray(w, jnp.float32),
+                      jnp.asarray(self._pending_comp)]
 
     # ------------------------------------------------------------------
     def run(self, steps: int, eval_every: int = 0,
@@ -234,11 +356,17 @@ class ScaDLESTrainer:
                                                        cfg.ddl_batch)
                     waits_vec[:] = wait
             # stream in: arrivals during previous iteration (+ wait time),
-            # scaled by each device's uptime over that interval
+            # scaled by each device's uptime over that interval.  The batch is
+            # debited *before* the fleet round decides the outcome, so track
+            # what was actually consumed — a crash or a policy cancellation
+            # refunds it (the samples were never trained on).
             arriving = stream_lib.arrivals(
                 rates, self.prev_iter_time + wait, self._online_frac)
+            debited = np.zeros(cfg.n_devices)
             for i, b in enumerate(self.buffers):
+                on_hand = b.size + float(arriving[i])
                 b.step(float(arriving[i]), float(batches[i]))
+                debited[i] = min(float(batches[i]), on_hand)
             # draw fixed-shape batches with masks
             xs, ys, masks = self.data.batches(self.rng, batches, cfg.b_max)
             inj_bytes = 0
@@ -263,64 +391,83 @@ class ScaDLESTrainer:
             # (stragglers dropped, crashes, late commits) masks aggregation.
             fleet_rec = {}
             if self.fleet is not None:
+                if self._carry_grads:
+                    # snapshot the params every starter reads this round; the
+                    # ring serves them back when the work commits rounds later
+                    self._ring_push(self.fleet.version)
                 res = self.fleet.round(waits=waits_vec, batches=batches,
                                        floats_on_wire=floats_wire,
                                        extra_bytes=inj_bytes)
                 dt = res.dt
+                # refund for thrown-away work: a crashed device or a
+                # cancelled straggler loses its gradient, not its samples
+                for i in set(res.crashed) | set(res.dropped):
+                    if debited[i] > 0:
+                        self.buffers[i].refund(debited[i])
+                        debited[i] = 0.0
                 if self._carry_grads:
-                    # a commit either aggregates fresh work that started this
-                    # round with real data, or carried work whose start-round
-                    # gradient was stored; anything else (e.g. a device that
-                    # started during an engine idle-advance with no batch
-                    # drawn) has no gradient to contribute
-                    fresh_commit = res.part & res.started & (batches > 0)
-                    use_stale = res.part & ~res.started & self._stale_valid
-                    part = fresh_commit | use_stale
+                    part, carry_args = self._plan_carry_commit(
+                        res, batches, rates, xs, ys, masks, debited, use_comp)
                 else:
                     part = res.part & (batches > 0)
+                    carry_args = None
                 self._online_frac = res.online_frac
                 for i in res.interrupted:
                     if self.fleet.profiles[i].volatile_buffer:
                         self.buffers[i].clear()
+                stale_vals = np.maximum(res.staleness, 0) * part
                 fleet_rec = {"n_started": float(res.started.sum()),
                              "n_part": float(part.sum()),
                              "n_dropped": float(len(res.dropped)),
                              "n_crashed": float(len(res.crashed)),
-                             "n_carried": float(len(res.carried))}
+                             "n_carried": float(len(res.carried)),
+                             "model_version": float(res.version),
+                             "mean_stale": (float(stale_vals.sum())
+                                            / max(float(part.sum()), 1.0)),
+                             "max_stale": float(stale_vals.max(initial=0))}
             else:
                 part = avail
-            agg_base = rates.astype(np.float64) if cfg.weighted \
-                else np.ones(cfg.n_devices)
-            agg_w = agg_base * part
-            rates_eff = rates * part
-            step_args = [self.params, self.momentum_state, jnp.asarray(xs),
-                         jnp.asarray(ys), jnp.asarray(masks, jnp.float32),
-                         jnp.asarray(rates_eff, jnp.float32),
-                         jnp.asarray(agg_w, jnp.float32)]
-            if self._carry_grads:
-                step_args += [jnp.asarray(self._stale_flat),
-                              jnp.asarray(use_stale)]
-            self.params, self.momentum_state, loss, gap, *extra = \
-                self._step_fn(*step_args, use_comp)
-            if self._carry_grads:
-                # remember the gradient each starter computed this round; it
-                # is what a late commit will aggregate
-                upd = res.started & (batches > 0)
-                fresh = np.asarray(extra[0])
-                self._stale_flat[upd] = fresh[upd]
-                self._stale_valid[upd] = True
-            if self.compressor:
-                self.compressor.decide(float(gap))     # EWMA update
-                self.compressor.account(use_comp, self.n_floats)
+                carry_args = None
+            if carry_args is not None and not part.any():
+                # nothing valid to aggregate at this commit (crashed
+                # committer, ring-evicted gradient, or an idle-advance
+                # starter with no data): no update — and carry the reported
+                # loss forward rather than logging a fake 0.0
+                loss = (self.history[-1]["loss"] if self.history
+                        else float("nan"))
+                gap = 0.0
+            else:
+                if carry_args is not None:
+                    # per-device start-round compression flags ride along as
+                    # the final step arg
+                    step_args = carry_args
+                else:
+                    agg_base = rates.astype(np.float64) if cfg.weighted \
+                        else np.ones(cfg.n_devices)
+                    agg_w = agg_base * part
+                    rates_eff = rates * part
+                    step_args = [self.params, self.momentum_state,
+                                 jnp.asarray(xs), jnp.asarray(ys),
+                                 jnp.asarray(masks, jnp.float32),
+                                 jnp.asarray(rates_eff, jnp.float32),
+                                 jnp.asarray(agg_w, jnp.float32), use_comp]
+                self.params, self.momentum_state, loss, gap = \
+                    self._step_fn(*step_args)
+                if self.compressor:
+                    self.compressor.decide(float(gap))     # EWMA update
+                    self.compressor.account(use_comp, self.n_floats)
             if self.fleet is None:
                 dt = self.clock.step(wait_s=wait,
                                      local_batch=float(np.mean(batches)),
                                      floats_on_wire=floats_wire,
                                      extra_bytes=inj_bytes)
-            # clamp: a straggler-dropping policy can commit before the
-            # slowest device's streaming wait elapses (dt < wait); full-sync
-            # always has dt >= wait, so the legacy accounting is unchanged
-            self.prev_iter_time = max(dt - wait, 0.0)
+                wait_realised = wait
+            else:
+                # only committed fresh starters gated the barrier: a dropped
+                # or carried straggler's wait never elapsed before the commit
+                # and must not shrink the next round's arrival interval
+                wait_realised = res.max_wait
+            self.prev_iter_time = max(dt - wait_realised, 0.0)
             rec = {"step": t, "loss": float(loss),
                    "sim_time_s": self.sim_time_s,
                    "wait_s": wait, "global_batch": float(np.sum(batches)),

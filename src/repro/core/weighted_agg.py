@@ -28,9 +28,16 @@ def rate_weights(rates):
     return rates / jnp.maximum(jnp.sum(rates), 1e-9)
 
 
-def weighted_aggregate(stacked_grads, rates):
-    """Eqn 4b over a leading device axis: g~ = sum_i r_i g_i."""
-    w = rate_weights(rates)
+def weighted_aggregate(stacked_grads, rates, normalize: bool = True):
+    """Eqn 4b over a leading device axis: g~ = sum_i r_i g_i.
+
+    ``normalize=False`` uses ``rates`` as final combination weights verbatim —
+    the relaxed-consistency trainer passes host-computed weights where
+    staleness damping must survive (a normalized single-participant commit
+    would cancel its own damping factor).
+    """
+    w = rate_weights(rates) if normalize \
+        else jnp.asarray(rates, jnp.float32)
 
     def comb(g):
         return jnp.tensordot(w.astype(g.dtype), g, axes=(0, 0))

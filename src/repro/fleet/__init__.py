@@ -1,13 +1,14 @@
 # repro.fleet: discrete-event heterogeneous edge-fleet simulation.
 from repro.fleet.devices import (  # noqa: F401
-    AUTO, BACKUP_WORKERS, BOUNDED_STALENESS, FULL_SYNC, LOCKSTEP, PER_DEVICE,
-    PRESETS, DeviceProfile, FleetConfig, is_homogeneous, make_fleet,
+    ASYNC, AUTO, BACKUP_WORKERS, BOUNDED_STALENESS, CARRY_POLICIES, FULL_SYNC,
+    LOCKSTEP, PER_DEVICE, PRESETS, SEMI_SYNC, DeviceProfile, FleetConfig,
+    is_homogeneous, make_fleet,
 )
 from repro.fleet.engine import FleetEngine, RoundResult  # noqa: F401
 from repro.fleet.events import (  # noqa: F401
     COMM_DONE, COMPUTE_DONE, DEVICE_DOWN, STREAM_READY, Event, EventQueue,
 )
 from repro.fleet.policies import (  # noqa: F401
-    BackupWorkers, BoundedStaleness, ChurnProcess, CommitPlan, FullSync,
-    SyncPolicy, make_policy,
+    Async, BackupWorkers, BoundedStaleness, ChurnProcess, CommitPlan,
+    FullSync, SemiSync, SyncPolicy, make_policy,
 )

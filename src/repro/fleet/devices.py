@@ -38,6 +38,13 @@ import numpy as np
 FULL_SYNC = "full-sync"
 BACKUP_WORKERS = "backup-workers"
 BOUNDED_STALENESS = "bounded-staleness"
+SEMI_SYNC = "semi-sync"
+ASYNC = "async"
+
+# policies whose commits can include work started at an older model version
+# (the trainer keeps a parameter-snapshot ring so those gradients are
+# evaluated at the params the device actually read)
+CARRY_POLICIES = (BOUNDED_STALENESS, SEMI_SYNC, ASYNC)
 
 LOCKSTEP = "lockstep"      # charge every device the fleet-mean batch (legacy)
 PER_DEVICE = "per-device"  # charge each device its own batch
@@ -132,6 +139,7 @@ class FleetConfig:
     drop_frac: float = 0.125          # backup-workers: drop slowest fraction
     staleness_bound: int = 4          # bounded-staleness: max rounds excluded
     quorum_frac: float = 0.5          # bounded-staleness: commit quorum
+    semi_sync_k: int = 2              # semi-sync: arrivals per barrier group
     churn: bool = False               # enable the availability model
     compute_model: str = AUTO         # lockstep | per-device | auto
     # comm-bytes source: None keeps the analytic ring formula (bit-exact with

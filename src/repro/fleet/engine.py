@@ -12,6 +12,15 @@ chain on a shared queue —
 in-flight work (crash).  The sync policy then picks the commit time and the
 participant set from the realised completion times.
 
+Commit granularity is the policy's call: full-sync/backup-workers commit one
+barrier per round; bounded-staleness, semi-sync (first K arrivals), and async
+(every arrival) commit sub-barrier groups, carrying the rest in flight.  The
+engine tracks a per-device *model version* — ``read_version[i]`` is the
+global version (= commits so far) device i's in-flight work started from —
+and each ``RoundResult`` reports the per-commit gradient staleness
+``version - read_version`` so the trainer can aggregate stale gradients at
+the parameters the device actually read, with staleness-aware damping.
+
 Degenerate case: a homogeneous fleet (``k80-uniform``) under ``full-sync``
 with churn off makes every completion identical to the legacy lockstep sum,
 so sim-times reproduce ``EdgeClock`` exactly (tested to 1e-9, required to 1%).
@@ -55,11 +64,14 @@ class RoundResult:
     started: np.ndarray       # bool (D,): began fresh work this round
     part: np.ndarray          # bool (D,): gradient aggregated at the commit
     online_frac: np.ndarray   # float (D,): uptime fraction over the round
-    max_wait: float           # realised streaming wait among started devices
+    max_wait: float           # realised wait among committed fresh starters
     crashed: List[int]        # lost in-flight work to a mid-round failure
     dropped: List[int]        # stragglers cancelled by the policy
     carried: List[int]        # work still in flight past the commit
     interrupted: List[int]    # any downtime during the round (buffer policy)
+    staleness: np.ndarray     # int (D,): commits each participant's gradient
+    #                           is behind the model it read (-1 = not committing)
+    version: int = 0          # model version after this commit
 
 
 class FleetEngine:
@@ -84,11 +96,18 @@ class FleetEngine:
         self.time_s = 0.0
         self.busy_until: Dict[int, float] = {}   # in-flight comm-done times
         self.staleness = np.zeros(self.n, np.int64)
+        # per-device model versions: ``version`` counts commits so far and
+        # ``read_version[i]`` is the version device i's in-flight (or last)
+        # work started from — a commit's gradient staleness is the difference
+        self.version = 0
+        self.read_version = np.zeros(self.n, np.int64)
         # lifetime counters for summaries
         self.rounds = 0
         self.total_participants = 0
         self.total_dropped = 0
         self.total_crashed = 0
+        self.total_staleness = 0
+        self.max_staleness = 0
         self.idle_advances = 0
 
     # -- per-device timing ------------------------------------------------
@@ -124,6 +143,7 @@ class FleetEngine:
               floats_on_wire: float, extra_bytes: float = 0.0) -> RoundResult:
         T0 = self.time_s
         t_start = T0
+        earlier_crashed: List[int] = []
         for retry in range(_MAX_IDLE_RETRIES):
             completions, started_set, crashed, crash_times = self._try_round(
                 t_start, waits, batches, floats_on_wire, extra_bytes)
@@ -132,7 +152,10 @@ class FleetEngine:
             # nobody finished: every starter crashed mid-work and/or the rest
             # are down.  Advance to the earliest re-admission — after a crash
             # that is the recovery following the failure — and retry; the gap
-            # (and the wasted attempt) is real sim time.
+            # (and the wasted attempt) is real sim time.  Keep the attempt's
+            # crash records: a device still down at the final attempt must be
+            # reported crashed so the trainer refunds its consumed batch.
+            earlier_crashed.extend(crashed)
             self.idle_advances += 1
             candidates = []
             for i in range(self.n):
@@ -144,6 +167,13 @@ class FleetEngine:
         else:
             raise RuntimeError("fleet made no progress after "
                                f"{_MAX_IDLE_RETRIES} idle advances")
+        # a device that crashed in an earlier attempt and restarted in the
+        # final one is accounted by that attempt; anything still down lost
+        # its work (and its batch) for real
+        crashed = sorted(set(crashed) | {i for i in earlier_crashed
+                                         if i not in started_set})
+        # fresh starters read the current model version when they began
+        self.read_version[sorted(started_set)] = self.version
         stale = {i: int(self.staleness[i]) for i in completions}
         plan = self.policy.plan(completions, stale)
         commit = plan.commit_time
@@ -162,21 +192,35 @@ class FleetEngine:
         part[plan.participants] = True
         started = np.zeros(self.n, bool)
         started[sorted(started_set)] = True
+        # per-commit gradient staleness: commits since each participant read
+        # the model (0 for work started and committed in the same round)
+        commit_stale = np.full(self.n, -1, np.int64)
+        commit_stale[part] = self.version - self.read_version[part]
         online = np.array([self.churn.up_fraction(i, T0, commit)
                            for i in range(self.n)])
         interrupted = [i for i in range(self.n) if online[i] < 1.0 - 1e-12]
-        max_wait = float(np.max(waits[started])) if started.any() else 0.0
+        # the wait that actually gated this commit: only devices whose fresh
+        # work was aggregated were waited for — a dropped or carried straggler
+        # never blocked the barrier, so its wait must not be charged
+        fresh = started & part
+        max_wait = float(np.max(waits[fresh])) if fresh.any() else 0.0
 
         self.time_s = commit
+        self.version += 1
         self.rounds += 1
         self.total_participants += len(plan.participants)
         self.total_dropped += len(plan.cancelled)
         self.total_crashed += len(crashed)
+        if plan.participants:
+            s_vals = commit_stale[plan.participants]
+            self.total_staleness += int(s_vals.sum())
+            self.max_staleness = max(self.max_staleness, int(s_vals.max()))
         return RoundResult(dt=commit - T0, commit_time=commit,
                            started=started, part=part, online_frac=online,
                            max_wait=max_wait, crashed=crashed,
                            dropped=plan.cancelled, carried=plan.carried,
-                           interrupted=interrupted)
+                           interrupted=interrupted, staleness=commit_stale,
+                           version=self.version)
 
     def _try_round(self, t_start: float, waits, batches, floats_on_wire,
                    extra_bytes):
@@ -184,8 +228,12 @@ class FleetEngine:
         (completions, started, crashed, crash_times)."""
         started = [i for i in range(self.n)
                    if self.churn.is_up(i, t_start) and i not in self.busy_until]
-        mean_batch = float(np.mean([max(batches[i], 1.0) for i in started])) \
-            if started else 1.0
+        # lockstep charges the fleet-mean batch: average over devices with
+        # real work only — a zero-batch starter (avail-masked after an idle
+        # advance, or admitted with an empty stream) must not drag the mean
+        # toward the 1.0 floor and distort everyone's compute charge
+        real = [float(batches[i]) for i in started if batches[i] > 0]
+        mean_batch = float(np.mean(real)) if real else 1.0
         q = ev.EventQueue()
         for i in started:
             # a device can drop while still gathering its mini-batch
@@ -233,4 +281,8 @@ class FleetEngine:
             "fleet_dropped": float(self.total_dropped),
             "fleet_crashed": float(self.total_crashed),
             "fleet_idle_advances": float(self.idle_advances),
+            "fleet_version": float(self.version),
+            "fleet_mean_staleness": (self.total_staleness
+                                     / max(self.total_participants, 1)),
+            "fleet_max_staleness": float(self.max_staleness),
         }

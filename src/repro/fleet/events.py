@@ -2,7 +2,12 @@
 
 The legacy ``EdgeClock`` advances one lockstep iteration at a time; the fleet
 engine instead schedules *per-device* events on a priority queue and lets the
-sync policy decide when a round commits.  Event kinds:
+sync policy decide when — and at what granularity — a round commits: one
+fleet-wide barrier (full-sync/backup-workers), a quorum (bounded-staleness),
+the first K arrivals (semi-sync), or every single arrival (async).  No new
+event kinds are needed for the relaxed modes: a COMM_DONE the policy does not
+commit simply stays in flight (``busy_until``) and re-enters a later round's
+queue.  Event kinds:
 
 * ``STREAM_READY``  — device gathered enough streamed samples to start
   (conventional DDL's per-device streaming wait; 0 for ScaDLES);

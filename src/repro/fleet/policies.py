@@ -11,6 +11,14 @@ gradients make it in, and (c) what happens to stragglers:
 * ``BoundedStaleness`` — commit once a quorum has arrived; stragglers keep
   their work in flight and join a later commit, but any device excluded for
   ``bound`` consecutive rounds is force-waited (SSP-style staleness cap).
+* ``SemiSync``         — K-batch barrier: commit as soon as the first ``k``
+  gradients arrive; the rest stay in flight and join a later commit.  ``k=1``
+  approaches fully-async, ``k=n`` recovers full-sync.
+* ``Async``            — relaxed consistency (ADSP-style): every arrival
+  commits immediately, so one engine round = one gradient (ties commit
+  together, which makes a homogeneous zero-wait fleet degenerate to
+  full-sync).  Staleness is unbounded here; the trainer bounds its *effect*
+  via the parameter-snapshot ring (evicted versions aggregate with weight 0).
 
 ``ChurnProcess`` is an alternating-renewal availability model (exponential
 up/down durations per device, independent streams) used by the engine for
@@ -24,8 +32,9 @@ from typing import Dict, List, Sequence
 
 import numpy as np
 
-from repro.fleet.devices import (BACKUP_WORKERS, BOUNDED_STALENESS, FULL_SYNC,
-                                 DeviceProfile, FleetConfig)
+from repro.fleet.devices import (ASYNC, BACKUP_WORKERS, BOUNDED_STALENESS,
+                                 FULL_SYNC, SEMI_SYNC, DeviceProfile,
+                                 FleetConfig)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -98,6 +107,32 @@ class BoundedStaleness(SyncPolicy):
         return CommitPlan(commit, part, [], carried)
 
 
+class SemiSync(SyncPolicy):
+    """Commit at the k-th earliest arrival; later arrivals stay in flight."""
+    name = SEMI_SYNC
+
+    def __init__(self, k: int = 2):
+        if k < 1:
+            raise ValueError(f"semi-sync barrier size must be >= 1, got {k}")
+        self.k = k
+
+    def plan(self, completions, staleness):
+        order = sorted(completions, key=lambda i: (completions[i], i))
+        kth = min(self.k, len(order))
+        commit = completions[order[kth - 1]]
+        part = [i for i in order if completions[i] <= commit]
+        carried = [i for i in order if completions[i] > commit]
+        return CommitPlan(commit, part, [], carried)
+
+
+class Async(SemiSync):
+    """Commit every arrival the moment it lands: semi-sync with k=1."""
+    name = ASYNC
+
+    def __init__(self):
+        super().__init__(k=1)
+
+
 def make_policy(cfg: FleetConfig) -> SyncPolicy:
     if cfg.policy == FULL_SYNC:
         return FullSync()
@@ -105,8 +140,12 @@ def make_policy(cfg: FleetConfig) -> SyncPolicy:
         return BackupWorkers(cfg.drop_frac)
     if cfg.policy == BOUNDED_STALENESS:
         return BoundedStaleness(cfg.staleness_bound, cfg.quorum_frac)
+    if cfg.policy == SEMI_SYNC:
+        return SemiSync(cfg.semi_sync_k)
+    if cfg.policy == ASYNC:
+        return Async()
     raise ValueError(f"unknown sync policy {cfg.policy!r}; options: "
-                     f"{[FULL_SYNC, BACKUP_WORKERS, BOUNDED_STALENESS]}")
+                     f"{[FULL_SYNC, BACKUP_WORKERS, BOUNDED_STALENESS, SEMI_SYNC, ASYNC]}")
 
 
 # ---------------------------------------------------------------------------

@@ -71,6 +71,31 @@ def test_sample_buffer_persistence_keeps_everything():
     assert buf.take(100) == list(range(60))   # take is bounded by contents
 
 
+def test_counting_buffer_refund_accounting():
+    cb = CountingBuffer()
+    cb.step(100.0, 60.0)
+    assert cb.total_consumed == 60.0 and cb.size == 40.0
+    cb.refund(60.0)                           # the work was thrown away
+    assert cb.size == 100.0 and cb.total_consumed == 0.0
+    assert cb.size == pytest.approx(
+        cb.total_streamed - cb.total_consumed - cb.total_dropped)
+    # consumption is clamped to what is actually on hand
+    cb2 = CountingBuffer()
+    cb2.step(10.0, 99.0)
+    assert cb2.total_consumed == 10.0 and cb2.size == 0.0
+
+
+def test_counting_buffer_refund_then_truncation_recaps():
+    cb = CountingBuffer(policy=TRUNCATION)
+    cb.step(50.0, 50.0)
+    cb.refund(50.0)                           # may exceed the truncation cap
+    assert cb.size == 50.0
+    cb.step(20.0, 0.0)                        # next step re-applies the cap
+    assert cb.size == 20.0
+    assert cb.size == pytest.approx(
+        cb.total_streamed - cb.total_consumed - cb.total_dropped)
+
+
 def test_buffers_clear_counts_losses():
     cb = CountingBuffer()
     cb.step(120.0, 20.0)

@@ -6,9 +6,9 @@ import numpy as np
 import pytest
 
 from repro.core.simclock import EdgeClock, EdgeClockConfig
-from repro.fleet import (BackupWorkers, BoundedStaleness, ChurnProcess,
+from repro.fleet import (Async, BackupWorkers, BoundedStaleness, ChurnProcess,
                          DeviceProfile, EventQueue, FleetConfig, FleetEngine,
-                         FullSync, make_fleet, make_policy)
+                         FullSync, SemiSync, make_fleet, make_policy)
 from repro.fleet import COMM_DONE, COMPUTE_DONE, STREAM_READY
 
 
@@ -89,6 +89,21 @@ def test_churn_next_up_after_down_period():
     assert t_up > t_down and c.is_up(0, t_up)
 
 
+def test_churn_up_fraction_flip_exactly_at_boundaries():
+    """Transitions landing exactly on t0/t1: the flip at t1 is outside
+    [t0, t1) (still fully up), the flip at t0 counts (down from t0 on)."""
+    profs = [DeviceProfile("d", mtbf_s=10.0, mttr_s=10.0)]
+    c = ChurnProcess(profs, seed=0)
+    c._flips[0] = [10.0, 20.0]          # down at 10.0, back up at 20.0
+    c._sampled_until[0] = 1e9           # pin the schedule
+    assert c.up_fraction(0, 0.0, 10.0) == pytest.approx(1.0)
+    assert c.up_fraction(0, 10.0, 20.0) == pytest.approx(0.0)
+    assert c.up_fraction(0, 20.0, 30.0) == pytest.approx(1.0)
+    assert c.up_fraction(0, 5.0, 25.0) == pytest.approx(0.5)
+    # state queries agree with the half-open convention
+    assert not c.is_up(0, 10.0) and c.is_up(0, 20.0)
+
+
 # ---------------------------------------------------------------------------
 # sync policies (pure plan logic)
 
@@ -122,6 +137,27 @@ def test_bounded_staleness_quorum_and_forced_sync():
     assert plan2.participants == [0, 1, 2, 3]
 
 
+def test_semi_sync_commits_at_kth_arrival():
+    plan = SemiSync(k=2).plan(COMPLETIONS, NO_STALE)
+    assert plan.commit_time == 11.0
+    assert plan.participants == [0, 1]
+    assert plan.carried == [2, 3] and plan.cancelled == []
+    # a barrier wider than the arrivals degrades to full-sync
+    plan2 = SemiSync(k=9).plan(COMPLETIONS, NO_STALE)
+    assert plan2.commit_time == 40.0
+    assert plan2.participants == [0, 1, 2, 3] and plan2.carried == []
+
+
+def test_async_commits_every_arrival():
+    plan = Async().plan(COMPLETIONS, NO_STALE)
+    assert plan.commit_time == 10.0
+    assert plan.participants == [0]
+    assert plan.carried == [1, 2, 3] and plan.cancelled == []
+    # simultaneous arrivals commit together (homogeneous degenerate case)
+    plan2 = Async().plan({0: 5.0, 1: 5.0, 2: 9.0}, {})
+    assert plan2.participants == [0, 1] and plan2.carried == [2]
+
+
 def test_make_policy_rejects_unknown():
     with pytest.raises(ValueError):
         make_policy(FleetConfig(policy="gossip"))
@@ -129,6 +165,11 @@ def test_make_policy_rejects_unknown():
         BackupWorkers(drop_frac=1.0)
     with pytest.raises(ValueError):
         BoundedStaleness(bound=0)
+    with pytest.raises(ValueError):
+        SemiSync(k=0)
+    assert isinstance(make_policy(FleetConfig(policy="semi-sync",
+                                              semi_sync_k=3)), SemiSync)
+    assert isinstance(make_policy(FleetConfig(policy="async")), Async)
 
 
 # ---------------------------------------------------------------------------
@@ -215,6 +256,127 @@ def test_engine_churn_crash_and_idle_advance():
     assert s["fleet_crashed"] > 0 or s["fleet_idle_advances"] > 0
 
 
+def test_engine_async_versions_and_per_commit_staleness():
+    """Async: one arrival commits per round; the model version advances by 1
+    per commit and the slow device's gradient reports the commits it missed."""
+    profs = [DeviceProfile(f"d{i}", compute_mult=m)
+             for i, m in enumerate([1.0, 3.0])]
+    base = EdgeClockConfig(n_devices=2, grad_floats=1e6)
+    eng = FleetEngine(FleetConfig(profile=profs, policy="async"), base)
+    b, z = np.full(2, 64.0), np.zeros(2)
+    slow_stale = []
+    for r in range(8):
+        act = eng.active_mask()
+        res = eng.round(waits=z, batches=b * act, floats_on_wire=1e6)
+        assert res.version == r + 1 == eng.version
+        assert res.part.sum() == 1             # per-arrival commit
+        assert (res.staleness[res.part] >= 0).all()
+        assert (res.staleness[~res.part] == -1).all()
+        if res.part[1]:
+            slow_stale.append(int(res.staleness[1]))
+    # the 3x-slower device commits, and always behind the model it read
+    assert slow_stale and min(slow_stale) >= 1
+    s = eng.summary()
+    assert s["fleet_max_staleness"] >= 1
+    assert s["fleet_mean_staleness"] > 0
+
+
+def test_engine_semi_sync_barrier_group_size():
+    profs = [DeviceProfile(f"d{i}", compute_mult=m)
+             for i, m in enumerate([1.0, 1.5, 2.0, 4.0])]
+    base = EdgeClockConfig(n_devices=4, grad_floats=1e6)
+    eng = FleetEngine(FleetConfig(profile=profs, policy="semi-sync",
+                                  semi_sync_k=2), base)
+    b, z = np.full(4, 64.0), np.zeros(4)
+    res = eng.round(waits=z, batches=b, floats_on_wire=1e6)
+    assert res.part.sum() == 2                 # first K arrivals
+    assert list(np.flatnonzero(res.part)) == [0, 1]
+    assert len(res.carried) == 2
+    # fresh commits in the first round carry no staleness
+    assert (res.staleness[res.part] == 0).all()
+
+
+def test_engine_bounded_staleness_overdue_forces_commit_past_quorum():
+    """A device at staleness >= bound forces the barrier: the commit moves
+    from the quorum completion time out to the overdue straggler's."""
+    profs = [DeviceProfile(f"d{i}", compute_mult=m)
+             for i, m in enumerate([1.0, 1.0, 1.0, 6.0])]
+    base = EdgeClockConfig(n_devices=4, grad_floats=1e6)
+    eng = FleetEngine(FleetConfig(profile=profs, policy="bounded-staleness",
+                                  staleness_bound=2, quorum_frac=0.5), base)
+    b, z = np.full(4, 64.0), np.zeros(4)
+    fast_dt = None
+    for r in range(3):
+        act = eng.active_mask()
+        res = eng.round(waits=z, batches=b * act, floats_on_wire=1e6)
+        if r == 0:
+            fast_dt = res.dt                   # quorum-of-fast round length
+        if r < 2:
+            assert not res.part[3] and 3 in res.carried
+    # round 3: staleness[3] hit the bound -> forced full wait for it
+    assert res.part[3]
+    assert int(res.staleness[3]) == 2
+    assert res.dt > 2 * fast_dt                # commit pushed past the quorum
+    assert int(eng.staleness[3]) == 0          # straggler reset after commit
+
+
+def test_engine_max_wait_restricted_to_committed_participants():
+    """Bugfix: a dropped or carried straggler's streaming wait never gated
+    the commit and must not be reported as the round's realised wait."""
+    profs = [DeviceProfile("a"), DeviceProfile("b")]
+    base = EdgeClockConfig(n_devices=2, grad_floats=1e6)
+    waits = np.array([0.5, 50.0])
+    b = np.full(2, 64.0)
+    eng_bk = FleetEngine(FleetConfig(profile=profs, policy="backup-workers",
+                                     drop_frac=0.5), base)
+    res = eng_bk.round(waits=waits, batches=b, floats_on_wire=1e6)
+    assert res.dropped == [1]
+    assert res.max_wait == pytest.approx(0.5)  # not the cancelled 50 s
+    eng_bs = FleetEngine(FleetConfig(profile=profs, policy="bounded-staleness",
+                                     quorum_frac=0.5), base)
+    res2 = eng_bs.round(waits=waits, batches=b, floats_on_wire=1e6)
+    assert res2.carried == [1]
+    assert res2.max_wait == pytest.approx(0.5)
+    # full-sync keeps the fleet-wide max (everyone committed)
+    eng_fs = FleetEngine(FleetConfig(profile=profs), base)
+    res3 = eng_fs.round(waits=waits, batches=b, floats_on_wire=1e6)
+    assert res3.max_wait == pytest.approx(50.0)
+
+
+def test_engine_lockstep_mean_batch_ignores_zero_batch_starters():
+    """Bugfix: an avail-masked zero-batch starter used to be floored to 1.0
+    and drag the lockstep fleet-mean batch (and everyone's compute charge)."""
+    base = EdgeClockConfig(n_devices=2, grad_floats=1e6)
+    eng = FleetEngine(FleetConfig(profile="k80-uniform"), base)   # lockstep
+    clk = EdgeClock(base)
+    res = eng.round(waits=np.zeros(2), batches=np.array([64.0, 0.0]),
+                    floats_on_wire=1e6)
+    dt = clk.step(wait_s=0.0, local_batch=64.0, floats_on_wire=1e6)
+    assert res.dt == pytest.approx(dt, rel=1e-9)
+
+
+def test_engine_reports_crashes_from_idle_advance_attempts():
+    """Bugfix: a device that crashed during an attempt that ended in an idle
+    advance, and is still down at the final attempt, must appear in
+    RoundResult.crashed — the trainer's buffer refund depends on it."""
+    profs = [DeviceProfile(f"p{i}", mtbf_s=100.0, mttr_s=100.0)
+             for i in range(2)]
+    base = EdgeClockConfig(n_devices=2, grad_floats=1e6)
+    eng = FleetEngine(FleetConfig(profile=profs, churn=True), base)
+    # manufactured schedules: both crash mid-compute on the first attempt
+    # (forcing an idle advance); device 1 recovers at t=10 and completes,
+    # device 0 stays down until t=1e6
+    eng.churn._flips[0] = [0.5, 1e6]
+    eng.churn._flips[1] = [1.0, 10.0, 1e6, 1e6 + 1]
+    eng.churn._sampled_until = [1e9, 1e9]
+    res = eng.round(waits=np.zeros(2), batches=np.full(2, 64.0),
+                    floats_on_wire=1e6)
+    assert eng.idle_advances >= 1
+    assert res.part[1] and not res.started[0]
+    assert res.crashed == [0]                  # lost work in attempt 1
+    assert eng.summary()["fleet_crashed"] == 1.0
+
+
 def test_engine_heterogeneous_links_slowest_bound():
     profs = [DeviceProfile("fast", bandwidth_gbps=5.0),
              DeviceProfile("slow", bandwidth_gbps=0.5)]
@@ -290,3 +452,125 @@ def test_trainer_fleet_policies_run_and_participate(small_setup):
     assert 0.0 < s["fleet_part_rate"] < 1.0    # stragglers actually dropped
     assert np.isfinite(tr.history[-1]["loss"])
     assert all(h["n_part"] >= 1 for h in tr.history)
+
+
+def test_trainer_async_degenerate_equals_legacy(small_setup):
+    """Async on a homogeneous zero-wait fleet: every completion ties, so all
+    devices commit together with staleness 0 and the relaxed-consistency
+    path (ring lookups, damped weights) must reproduce the legacy trainer."""
+    from repro.core import ScaDLESConfig, ScaDLESTrainer
+    model, src = small_setup
+    kw = dict(n_devices=8, dist="S1", weighted=True, b_max=64,
+              grad_floats=60.2e6)
+    legacy = ScaDLESTrainer(model, src, ScaDLESConfig(**kw))
+    asy = ScaDLESTrainer(model, src, ScaDLESConfig(
+        fleet=FleetConfig(profile="k80-uniform", policy="async"), **kw))
+    legacy.run(8)
+    asy.run(8)
+    assert asy.sim_time_s == pytest.approx(legacy.sim_time_s, rel=1e-9)
+    for h_l, h_a in zip(legacy.history, asy.history):
+        assert h_a["loss"] == pytest.approx(h_l["loss"], rel=1e-3, abs=1e-4)
+        assert h_a["mean_stale"] == 0.0
+    assert asy.summary()["fleet_max_staleness"] == 0.0
+
+
+@pytest.mark.parametrize("policy,kw", [
+    ("async", {}),
+    ("semi-sync", {"semi_sync_k": 4}),
+])
+def test_trainer_relaxed_policies_commit_stale_gradients(small_setup, policy,
+                                                         kw):
+    from repro.core import ScaDLESConfig, ScaDLESTrainer
+    model, src = small_setup
+    fl = FleetConfig(profile="jetson-mixed", policy=policy, **kw)
+    tr = ScaDLESTrainer(model, src, ScaDLESConfig(
+        n_devices=8, dist="S1", weighted=True, b_max=64,
+        grad_floats=60.2e6, fleet=fl))
+    tr.run(24)
+    s = tr.summary()
+    assert s["fleet_version"] == 24            # one commit per trainer step
+    assert s["fleet_part_rate"] < 1.0          # sub-fleet commit groups
+    assert s["fleet_mean_staleness"] > 0       # stale gradients were applied
+    assert np.isfinite(tr.history[-1]["loss"])
+    # training still makes progress under relaxed consistency
+    assert tr.history[-1]["loss"] < tr.history[0]["loss"]
+
+
+# ---------------------------------------------------------------------------
+# buffer accounting (refund for thrown-away work)
+
+
+def test_trainer_refunds_buffer_of_dropped_straggler(small_setup):
+    """Bugfix: batches were debited before the round decided the outcome, so
+    a cancelled straggler lost its gradient AND its queued samples.  A device
+    that is always dropped must keep every sample it ever streamed."""
+    from repro.core import ScaDLESConfig, ScaDLESTrainer
+    from repro.data import ClassClusterData, DeviceDataSource
+    model, _ = small_setup
+    data = ClassClusterData(num_classes=10, train_per_class=24,
+                            test_per_class=4, noise=0.8, seed=0)
+    src = DeviceDataSource(data, 4, iid=True)
+    profs = [DeviceProfile(f"d{i}", compute_mult=m)
+             for i, m in enumerate([1.0, 1.0, 1.0, 10.0])]
+    fl = FleetConfig(profile=profs, policy="backup-workers", drop_frac=0.25)
+    tr = ScaDLESTrainer(model, src, ScaDLESConfig(
+        n_devices=4, dist="S1", weighted=True, b_max=64,
+        grad_floats=60.2e6, fleet=fl))
+    tr.run(6)
+    assert sum(h["n_dropped"] for h in tr.history) == 6
+    b = tr.buffers[3]
+    assert b.total_consumed == pytest.approx(0.0)
+    assert b.size == pytest.approx(b.total_streamed)   # persistence: intact
+    # the kept devices really did consume
+    assert all(tr.buffers[i].total_consumed > 0 for i in range(3))
+
+
+def test_trainer_refunds_ring_evicted_commits_and_consumes_pending_once(
+        small_setup):
+    """A committer whose read version fell off the param ring is
+    zero-weighted — its samples must be refunded, not vanish; and a pending
+    batch commits at most once (the store invalidates on engine commit)."""
+    from repro.core import ScaDLESConfig, ScaDLESTrainer
+    from repro.data import ClassClusterData, DeviceDataSource
+    model, _ = small_setup
+    data = ClassClusterData(num_classes=10, train_per_class=24,
+                            test_per_class=4, noise=0.8, seed=0)
+    src = DeviceDataSource(data, 2, iid=True)
+    profs = [DeviceProfile("fast"), DeviceProfile("slow", compute_mult=3.0)]
+    fl = FleetConfig(profile=profs, policy="async")
+    tr = ScaDLESTrainer(model, src, ScaDLESConfig(
+        n_devices=2, dist="S1", weighted=True, b_max=64, grad_floats=60.2e6,
+        fleet=fl, param_ring=1))   # depth 1: any staleness >= 1 evicts
+    tr.run(10)
+    slow = tr.buffers[1]
+    # the slow device only ever commits stale -> always evicted -> refunded
+    assert slow.total_consumed == pytest.approx(0.0)
+    assert slow.size == pytest.approx(slow.total_streamed)
+    assert tr.buffers[0].total_consumed > 0
+    # pending entries survive only for work still in flight in the engine —
+    # a committed batch can never be re-committed by a later empty start
+    for i in np.flatnonzero(tr._pending_valid):
+        assert i in tr.fleet.busy_until
+
+
+def test_trainer_buffer_conservation_under_backup_workers_with_churn(
+        small_setup):
+    from repro.core import ScaDLESConfig, ScaDLESTrainer
+    from repro.data import ClassClusterData, DeviceDataSource
+    model, _ = small_setup
+    data = ClassClusterData(num_classes=10, train_per_class=24,
+                            test_per_class=4, noise=0.8, seed=0)
+    src = DeviceDataSource(data, 6, iid=True)
+    fl = FleetConfig(profile="phone-flaky", policy="backup-workers",
+                     drop_frac=0.25, churn=True)
+    tr = ScaDLESTrainer(model, src, ScaDLESConfig(
+        n_devices=6, dist="S1", weighted=True, b_max=64,
+        grad_floats=60.2e6, fleet=fl))
+    tr.run(12)
+    thrown = sum(h["n_dropped"] + h["n_crashed"] for h in tr.history)
+    assert thrown > 0                          # refund path exercised
+    for b in tr.buffers:
+        assert b.total_consumed >= -1e-9       # refunds never double-credit
+        # conservation: streamed == on-queue + trained + lost-to-churn
+        assert b.size == pytest.approx(
+            b.total_streamed - b.total_consumed - b.total_dropped, abs=1e-6)
