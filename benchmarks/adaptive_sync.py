@@ -1,0 +1,115 @@
+"""Adaptive synchronization: the hill-climb controller vs every static policy.
+
+PR 3 left the sync policy frozen at trainer construction, so the operator
+must guess the right commit granularity for their fleet.  The control plane
+(``repro.fleet.control``) removes the guess: an ADSP-style hill climb tunes
+the semi-sync barrier size online from realised loss-progress-per-simulated-
+second, escalating between policy families (async <-> semi-sync <->
+full-sync) at the edges of the spectrum.
+
+This benchmark runs every static policy on the heterogeneous presets
+(``jetson-mixed``, ``phone-flaky``), then the controller — which is *not*
+told which static policy wins — and reports time-to-target for each.  The
+headline check (CI-diffable in ``artifacts/fleet/adaptive_sync.json``):
+
+* ``controller_within_5pct`` — the controller's time-to-target is within 5%
+  of (or beats) the best static policy's on each profile;
+* on ``k80-uniform`` (homogeneous, zero-wait) the controller stays
+  bit-exact with the legacy lockstep ``EdgeClock`` under full-sync — ties
+  commit the whole fleet no matter what k the controller explores.
+
+Step budgets scale inversely with commits-per-round so every run sees a
+comparable number of gradients (an async commit carries one).
+"""
+import time
+
+from benchmarks.common import emit, run_trainer, write_json_artifact
+from repro.core import TRUNCATION, ScaDLESConfig
+from repro.fleet import FleetConfig
+
+N_DEVICES = 16
+TARGET = 0.1
+DIST = "S1"
+PROFILES = ("jetson-mixed", "phone-flaky")
+# (label, policy, steps, FleetConfig overrides)
+STATIC = (
+    ("full-sync", "full-sync", 40, {}),
+    ("backup-workers", "backup-workers", 40, {"drop_frac": 0.25}),
+    ("bounded-staleness", "bounded-staleness", 60, {"staleness_bound": 4}),
+    ("semi-sync-k8", "semi-sync", 100, {"semi_sync_k": 8}),
+    ("semi-sync-k4", "semi-sync", 160, {"semi_sync_k": 4}),
+    ("async", "async", 400, {}),
+)
+CONTROLLER_STEPS = 400
+
+
+def run_one(profile: str, policy: str, steps: int, overrides: dict):
+    fleet = FleetConfig(profile=profile, policy=policy, churn=True,
+                        **overrides)
+    cfg = ScaDLESConfig(n_devices=N_DEVICES, dist=DIST, weighted=True,
+                        policy=TRUNCATION, b_max=128, base_lr=0.05,
+                        grad_floats=60.2e6, fleet=fleet)
+    out = run_trainer(cfg, steps, loss_target=TARGET)
+    s = out["trainer"].summary()
+    return {
+        "t_target_s": out["time_to_target"],
+        "sim_time_s": s["sim_time_s"],
+        "acc": out["acc"],
+        "part_rate": s["fleet_part_rate"],
+        "mean_staleness": s["fleet_mean_staleness"],
+        "policy_switches": s["fleet_policy_switches"],
+    }, out["trainer"]
+
+
+def main():
+    rows = []
+    verdicts = {}
+    for profile in PROFILES:
+        best_static, best_name = float("inf"), None
+        for label, policy, steps, overrides in STATIC:
+            t0 = time.perf_counter()
+            row, _ = run_one(profile, policy, steps, overrides)
+            us = (time.perf_counter() - t0) * 1e6
+            row.update(profile=profile, policy=label, steps=steps,
+                       controller=False)
+            if row["t_target_s"] < best_static:
+                best_static, best_name = row["t_target_s"], label
+            emit(f"adaptive_{profile}_{label}", us,
+                 f"t_target={row['t_target_s']:.1f};acc={row['acc']:.3f};"
+                 f"part={row['part_rate']:.2f}")
+            rows.append(row)
+        t0 = time.perf_counter()
+        row, tr = run_one(profile, "full-sync", CONTROLLER_STEPS,
+                          {"controller": "hill-climb"})
+        us = (time.perf_counter() - t0) * 1e6
+        ctrl = tr.fleet.controller
+        row.update(profile=profile, policy="controller",
+                   steps=CONTROLLER_STEPS, controller=True,
+                   final_policy=tr.fleet.policy.name,
+                   final_ref_k=ctrl.ref_k,
+                   actions=[a.reason for a in ctrl.actions])
+        ratio = (row["t_target_s"] / best_static
+                 if best_static not in (0, float("inf")) else float("nan"))
+        within = bool(ratio <= 1.05) if ratio == ratio else False
+        verdicts[profile] = {
+            "best_static": best_name, "best_static_t": best_static,
+            "controller_t": row["t_target_s"], "ratio": ratio,
+            "controller_within_5pct": within,
+        }
+        emit(f"adaptive_{profile}_controller", us,
+             f"t_target={row['t_target_s']:.1f};best_static={best_name};"
+             f"ratio={ratio:.3f};within_5pct={within}")
+        rows.append(row)
+    write_json_artifact("artifacts/fleet/adaptive_sync.json",
+                        {"n_devices": N_DEVICES, "dist": DIST,
+                         "loss_target": TARGET, "rows": rows,
+                         "verdicts": verdicts})
+    for profile, v in verdicts.items():
+        print(f"{profile}: controller {v['controller_t']:.1f}s vs best "
+              f"static ({v['best_static']}) {v['best_static_t']:.1f}s "
+              f"-> ratio {v['ratio']:.3f} "
+              f"({'PASS' if v['controller_within_5pct'] else 'FAIL'})")
+
+
+if __name__ == "__main__":
+    main()

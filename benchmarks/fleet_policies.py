@@ -14,7 +14,15 @@ Rows: fleet_{profile}_{policy}_{dist},us,derived with
 
 The same rows land machine-readable in ``artifacts/fleet/fleet_policies.json``
 so the perf trajectory is diffable across commits (CI uploads it).
+
+``--calibrated`` swaps the analytic ring-byte formula for HLO-sourced wire
+bytes: ``repro.dist.calibrate`` lowers the DDP program for this device count
+in a subprocess (cached under ``artifacts/perf/``), parses the per-device
+collective bytes, and plugs the result into ``FleetConfig.comm_model`` — the
+policy table regenerated with measured bytes instead of the modelled clock
+(ROADMAP "calibrated-fleet experiments").
 """
+import argparse
 import time
 
 from benchmarks.common import emit, run_trainer, write_json_artifact
@@ -23,15 +31,17 @@ from repro.fleet import FleetConfig
 
 STEPS = 40
 TARGET = 0.1
+N_DEVICES = 16
 PROFILES = ("k80-uniform", "jetson-mixed", "phone-flaky")
 POLICIES = ("full-sync", "backup-workers", "bounded-staleness")
 DISTS = ("S1", "S1p")
 
 
-def run_one(profile: str, policy: str, dist: str):
+def run_one(profile: str, policy: str, dist: str, comm_model=None):
     fleet = FleetConfig(profile=profile, policy=policy, drop_frac=0.25,
-                        staleness_bound=4, churn=(profile != "k80-uniform"))
-    cfg = ScaDLESConfig(n_devices=16, dist=dist, weighted=True,
+                        staleness_bound=4, churn=(profile != "k80-uniform"),
+                        comm_model=comm_model)
+    cfg = ScaDLESConfig(n_devices=N_DEVICES, dist=dist, weighted=True,
                         policy=TRUNCATION, b_max=128, base_lr=0.05,
                         grad_floats=60.2e6, fleet=fleet)
     out = run_trainer(cfg, STEPS, loss_target=TARGET)
@@ -39,13 +49,26 @@ def run_one(profile: str, policy: str, dist: str):
 
 
 def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--calibrated", action="store_true",
+                    help="source comm bytes from a (cached) HLO calibration "
+                         "instead of the analytic ring formula")
+    ap.add_argument("--arch", default="qwen1.5-0.5b",
+                    help="architecture to calibrate wire bytes from")
+    args = ap.parse_args()
+    comm_model = None
+    if args.calibrated:
+        from repro.dist.calibrate import calibrate
+        comm_model = calibrate(args.arch, n_devices=N_DEVICES)
+        print(f"# calibrated: {args.arch} D={N_DEVICES} dense_wire_bytes="
+              f"{comm_model.dense_wire_bytes:.3e}")
     rows = []
     for dist in DISTS:
         for profile in PROFILES:
             base_t = None
             for policy in POLICIES:
                 t0 = time.perf_counter()
-                out = run_one(profile, policy, dist)
+                out = run_one(profile, policy, dist, comm_model)
                 us = (time.perf_counter() - t0) * 1e6
                 t_target = out["time_to_target"]
                 if policy == "full-sync":
@@ -68,7 +91,10 @@ def main():
                     "dropped": s["fleet_dropped"],
                 })
     write_json_artifact("artifacts/fleet/fleet_policies.json",
-                        {"steps": STEPS, "loss_target": TARGET, "rows": rows})
+                        {"steps": STEPS, "loss_target": TARGET,
+                         "calibrated": bool(args.calibrated),
+                         "arch": args.arch if args.calibrated else None,
+                         "rows": rows})
 
 
 if __name__ == "__main__":

@@ -10,6 +10,13 @@ wall-clock.  Relaxed policies run more (smaller) commits, so each gets a
 step budget sized to a comparable gradient count, and the comparison is
 sim-seconds per committed gradient plus the realised staleness.
 
+New in PR 4, two adaptive-sync demos close the comparison: a *live policy
+switch* (the same trainer run starts synchronous and relaxes to semi-sync
+then async mid-run — `ScaDLESTrainer.set_sync_policy`, honoured at the next
+round boundary) and the *hill-climb controller*
+(`FleetConfig(controller="hill-climb")`), which finds the right granularity
+on its own from realised loss-progress-per-sim-second.
+
 Run:  PYTHONPATH=src python examples/fleet_churn.py
 """
 import numpy as np
@@ -48,7 +55,7 @@ def make_model(d_in=32 * 32 * 3, hidden=64, classes=10):
             "predict": predict}
 
 
-def run(policy: str, steps: int = STEPS, verbose: bool = False):
+def make_trainer(policy: str, **fleet_kw):
     data = ClassClusterData(num_classes=10, train_per_class=128,
                             test_per_class=32, noise=0.8, seed=0)
     model = make_model()
@@ -58,7 +65,13 @@ def run(policy: str, steps: int = STEPS, verbose: bool = False):
         b_max=128, grad_floats=60.2e6, seed=0,
         fleet=FleetConfig(profile="phone-flaky", policy=policy,
                           drop_frac=0.25, staleness_bound=4,
-                          semi_sync_k=N_DEVICES // 3, churn=True)))
+                          semi_sync_k=N_DEVICES // 3, churn=True,
+                          **fleet_kw)))
+    return tr, model, data
+
+
+def run(policy: str, steps: int = STEPS, verbose: bool = False):
+    tr, model, data = make_trainer(policy)
     tr.run(steps)
     if verbose:
         print(f"\n== timeline ({policy}) ==")
@@ -99,6 +112,36 @@ def main():
     print("\nthroughput speedup vs full-sync (sim-s per committed gradient):")
     for policy, (t_per_grad, acc) in results.items():
         print(f"  {policy:>18}: {base / t_per_grad:5.2f}x  (acc {acc:.3f})")
+
+    # -- live policy switch: one run, relaxing mid-flight ------------------
+    # the switch is queued and honoured at the next round boundary; the
+    # trainer re-derives carry machinery / ring sizing from the new policy
+    print("\n== live switch: full-sync -> semi-sync(k=4) -> async ==")
+    tr, model, data = make_trainer("full-sync")
+    for policy, kw, steps in (("full-sync", {}, 8),
+                              ("semi-sync", {"semi_sync_k": 4}, 16),
+                              ("async", {}, 40)):
+        if policy != "full-sync":
+            tr.set_sync_policy(policy, **kw)
+        tr.run(steps)
+    for i, h in list(enumerate(tr.history))[::8]:
+        print(f"  round {i:>3} ({h['policy']:>9}): "
+              f"sim_t={h['sim_time_s']:7.1f}s loss={h['loss']:.3f} "
+              f"part={int(h['n_part'])} stale={h['mean_stale']:.1f}")
+    s = tr.summary()
+    print(f"  switches={int(s['fleet_policy_switches'])}  "
+          f"final sim_t={tr.sim_time_s:.1f}s")
+
+    # -- controller: no policy guess at all --------------------------------
+    print("\n== hill-climb controller (tunes k online) ==")
+    tr, model, data = make_trainer("full-sync", controller="hill-climb")
+    tr.run(N_DEVICES * STEPS // 2)
+    ctrl = tr.fleet.controller
+    logits = model["predict"](tr.params, jnp.asarray(data.test_x))
+    acc = float(np.mean(np.argmax(np.asarray(logits), -1) == data.test_y))
+    print(f"  settled on {tr.fleet.policy.name} (ref k={ctrl.ref_k})  "
+          f"sim_time={tr.sim_time_s:.1f}s  acc={acc:.3f}")
+    print(f"  decisions: {[a.reason for a in ctrl.actions]}")
 
 
 if __name__ == "__main__":

@@ -57,7 +57,9 @@ class ScaDLESConfig:
     # device's stream/compute/comm events independently, applies the sync
     # policy (full-sync / backup-workers / bounded-staleness / semi-sync /
     # async) and churn, and feeds the realised participant set back into the
-    # aggregation below.
+    # aggregation below.  The policy is *live*: switch it mid-run with
+    # trainer.set_sync_policy / reconfigure_sync, or let a controller tune
+    # it online (FleetConfig(controller="hill-climb")).
     fleet: Optional[Any] = None
     # relaxed-consistency commits (bounded-staleness / semi-sync / async):
     # how many recent parameter snapshots to keep so a stale commit's gradient
@@ -110,11 +112,9 @@ class ScaDLESTrainer:
         # fleet mode: event-driven heterogeneous clock replaces the lockstep
         # EdgeClock (lazy import: repro.fleet depends on core.simclock)
         self.fleet = None
-        self._carry_grads = False
         if cfg.fleet is not None:
             from repro import fleet as fleet_lib
             self.fleet = fleet_lib.FleetEngine(cfg.fleet, self.clock.cfg)
-            self._carry_grads = cfg.fleet.policy in fleet_lib.CARRY_POLICIES
         self._online_frac = np.ones(cfg.n_devices)
         # relaxed-consistency commits (bounded-staleness / semi-sync / async):
         # a straggler's gradient commits rounds after its work started, and
@@ -123,20 +123,21 @@ class ScaDLESTrainer:
         # the engine's model version, supplies those stale params; each
         # device's start-round batch (and streaming rate) is kept pending so
         # the late gradient is recomputed exactly as the device would have.
-        if self._carry_grads:
+        # The machinery is allocated whenever a fleet is attached — the sync
+        # policy is *live* now (engine.set_policy / FleetConfig.controller),
+        # so whether a given round needs it is decided per round from the
+        # current policy (``_use_carry``), not frozen at construction.
+        if self.fleet is not None:
             from jax.flatten_util import ravel_pytree
             flat0, self._unravel_params = ravel_pytree(self.params)
             self._flat_dtype = np.asarray(flat0).dtype
             self._param_ring: "OrderedDict[int, np.ndarray]" = OrderedDict()
-            self._ring_depth = (max(int(cfg.param_ring), 1)
-                                if cfg.param_ring is not None
-                                else max(8, 4 * cfg.n_devices))
             self._pending_batch = None           # (xs, ys, masks) np arrays
             self._pending_rates = np.zeros(cfg.n_devices)
             self._pending_valid = np.zeros(cfg.n_devices, bool)
             self._pending_debit = np.zeros(cfg.n_devices)   # buffer samples
             self._pending_comp = np.zeros(cfg.n_devices, bool)  # use_comp
-        self._step_fn = self._build_step()
+        self._step_fn, self._carry_step_fn = self._build_step()
 
     # ------------------------------------------------------------------
     def _build_step(self):
@@ -162,8 +163,6 @@ class ScaDLESTrainer:
             pseudo_grad = jax.tree.map(
                 lambda a, b: (a - b) / cfg.base_lr, params, p_new)
             return jnp.mean(losses), pseudo_grad
-
-        carry = self._carry_grads
 
         def core(params, mom, xs, ys, masks, rates_eff, agg_w, use_comp,
                  dev_params=None, part_f=None):
@@ -222,31 +221,70 @@ class ScaDLESTrainer:
                     / jnp.maximum(jnp.sum(has_data), 1.0))
             return params, mom, loss, gap
 
-        if carry:
+        # both paths are built whenever a fleet is attached (jit is lazy, so
+        # an unused path costs nothing): the plain path serves synchronous
+        # rounds, the carry path any round that may commit stale gradients —
+        # chosen per round, because the policy can change mid-run
+        @jax.jit
+        def step(params, mom, xs, ys, masks, rates_eff, agg_w, use_comp):
+            return core(params, mom, xs, ys, masks, rates_eff, agg_w,
+                        use_comp)
+
+        carry_step = None
+        if self.fleet is not None:
             unravel = self._unravel_params
 
             @jax.jit
-            def step(params, mom, dev_flat, xs, ys, masks, part_f, rates_eff,
-                     agg_w, use_comp):
+            def carry_step(params, mom, dev_flat, xs, ys, masks, part_f,
+                           rates_eff, agg_w, use_comp):
                 dev_params = jax.vmap(unravel)(dev_flat)
                 return core(params, mom, xs, ys, masks, rates_eff, agg_w,
                             use_comp[:, None], dev_params=dev_params,
                             part_f=part_f)
-        else:
-            @jax.jit
-            def step(params, mom, xs, ys, masks, rates_eff, agg_w, use_comp):
-                return core(params, mom, xs, ys, masks, rates_eff, agg_w,
-                            use_comp)
 
-        return step
+        return step, carry_step
 
     # -- relaxed-consistency commit machinery ---------------------------
+    def _use_carry(self) -> bool:
+        """Whether the upcoming round must run the snapshot-ring commit
+        path: the policy it will run under can carry work across commits, or
+        older-policy work is still in flight (a switch back to a synchronous
+        family only returns to the plain path once everything drains)."""
+        return (self.fleet.next_policy().can_carry()
+                or bool(self.fleet.busy_until)
+                or bool(self._pending_valid.any()))
+
+    def _ring_depth_now(self) -> Tuple[int, int]:
+        """(soft, hard) ring depths for the upcoming round.  An explicit
+        ``cfg.param_ring`` is a hard staleness bound, as before.  Otherwise
+        the soft target is recomputed from the *current* policy (async needs
+        ~4 commit cycles of n, semi-sync of ceil(n/k), sync families almost
+        nothing) and the hard cap keeps worst-case memory at the legacy
+        auto size."""
+        if self.cfg.param_ring is not None:
+            depth = max(int(self.cfg.param_ring), 1)
+            return depth, depth
+        soft = self.fleet.next_policy().ring_depth(self.cfg.n_devices)
+        return soft, max(soft, 8, 4 * self.cfg.n_devices)
+
     def _ring_push(self, version: int) -> None:
-        """Snapshot current params under ``version``, evicting the oldest."""
+        """Snapshot current params under ``version``, trimming the oldest.
+        With policy-derived sizing, versions still referenced by in-flight
+        work are protected (shrinking k must not strand carried gradients);
+        the hard cap — and any explicit ``cfg.param_ring`` — still evicts
+        unconditionally, keeping the zero-weight safety valve."""
         from jax.flatten_util import ravel_pytree
         self._param_ring[version] = np.asarray(ravel_pytree(self.params)[0],
                                                self._flat_dtype)
-        while len(self._param_ring) > self._ring_depth:
+        soft, hard = self._ring_depth_now()
+        while len(self._param_ring) > hard:
+            self._param_ring.popitem(last=False)
+        floor_v = min((int(self.fleet.read_version[i])
+                       for i in self.fleet.busy_until), default=None)
+        while len(self._param_ring) > soft:
+            oldest = next(iter(self._param_ring))
+            if floor_v is not None and oldest >= floor_v:
+                break
             self._param_ring.popitem(last=False)
 
     def _ring_params(self, read_version: np.ndarray):
@@ -280,6 +318,16 @@ class ScaDLESTrainer:
         self._pending_valid[res.crashed] = False
         self._pending_debit[started_data] = debited[started_data]
         self._pending_comp[started_data] = use_comp
+        # a live switch into backup-workers can cancel in-flight work a
+        # relaxed policy had been carrying from an earlier round: the
+        # straggler loses its gradient, not its samples — refund the debit
+        # from its start round (same-round cancellations were already
+        # refunded from this round's ``debited`` before we got here)
+        for i in res.dropped:
+            if self._pending_valid[i]:
+                self.buffers[i].refund(self._pending_debit[i])
+                self._pending_valid[i] = False
+                self._pending_debit[i] = 0.0
         dev_flat, evicted = self._ring_params(self.fleet.read_version)
         # devices with live pending work this round (committers included):
         # the basis for the fleet-wide LR scaling below
@@ -391,7 +439,13 @@ class ScaDLESTrainer:
             # (stragglers dropped, crashes, late commits) masks aggregation.
             fleet_rec = {}
             if self.fleet is not None:
-                if self._carry_grads:
+                # per-round control-plane resolution: the policy is live
+                # (engine.set_policy / controller actions), so whether this
+                # round needs the snapshot-ring commit path — and how deep
+                # the ring must be — is derived from the policy the round
+                # will actually run under, not from the construction config
+                use_carry = self._use_carry()
+                if use_carry:
                     # snapshot the params every starter reads this round; the
                     # ring serves them back when the work commits rounds later
                     self._ring_push(self.fleet.version)
@@ -405,7 +459,7 @@ class ScaDLESTrainer:
                     if debited[i] > 0:
                         self.buffers[i].refund(debited[i])
                         debited[i] = 0.0
-                if self._carry_grads:
+                if use_carry:
                     part, carry_args = self._plan_carry_commit(
                         res, batches, rates, xs, ys, masks, debited, use_comp)
                 else:
@@ -416,6 +470,7 @@ class ScaDLESTrainer:
                     if self.fleet.profiles[i].volatile_buffer:
                         self.buffers[i].clear()
                 stale_vals = np.maximum(res.staleness, 0) * part
+                pol = self.fleet.policy
                 fleet_rec = {"n_started": float(res.started.sum()),
                              "n_part": float(part.sum()),
                              "n_dropped": float(len(res.dropped)),
@@ -424,7 +479,10 @@ class ScaDLESTrainer:
                              "model_version": float(res.version),
                              "mean_stale": (float(stale_vals.sum())
                                             / max(float(part.sum()), 1.0)),
-                             "max_stale": float(stale_vals.max(initial=0))}
+                             "max_stale": float(stale_vals.max(initial=0)),
+                             "policy": pol.name,
+                             **{f"knob_{k}": float(v)
+                                for k, v in pol.knobs().items()}}
             else:
                 part = avail
                 carry_args = None
@@ -440,19 +498,20 @@ class ScaDLESTrainer:
                 if carry_args is not None:
                     # per-device start-round compression flags ride along as
                     # the final step arg
-                    step_args = carry_args
+                    step_fn, step_args = self._carry_step_fn, carry_args
                 else:
                     agg_base = rates.astype(np.float64) if cfg.weighted \
                         else np.ones(cfg.n_devices)
                     agg_w = agg_base * part
                     rates_eff = rates * part
+                    step_fn = self._step_fn
                     step_args = [self.params, self.momentum_state,
                                  jnp.asarray(xs), jnp.asarray(ys),
                                  jnp.asarray(masks, jnp.float32),
                                  jnp.asarray(rates_eff, jnp.float32),
                                  jnp.asarray(agg_w, jnp.float32), use_comp]
                 self.params, self.momentum_state, loss, gap = \
-                    self._step_fn(*step_args)
+                    step_fn(*step_args)
                 if self.compressor:
                     self.compressor.decide(float(gap))     # EWMA update
                     self.compressor.account(use_comp, self.n_floats)
@@ -467,6 +526,13 @@ class ScaDLESTrainer:
                 # or carried straggler's wait never elapsed before the commit
                 # and must not shrink the next round's arrival interval
                 wait_realised = res.max_wait
+            # close the control loop: the engine's controller (if any) sees
+            # this commit's telemetry + realised loss, and its action rides
+            # the deferred reconfiguration path to the next round boundary
+            if self.fleet is not None and self.fleet.controller is not None:
+                action = self.fleet.controller_update(float(loss))
+                if action is not None:
+                    fleet_rec["ctrl_action"] = action.reason
             self.prev_iter_time = max(dt - wait_realised, 0.0)
             rec = {"step": t, "loss": float(loss),
                    "sim_time_s": self.sim_time_s,
@@ -479,6 +545,24 @@ class ScaDLESTrainer:
                 rec.update(eval_fn(self.params))
             self.history.append(rec)
         return self.history
+
+    # live sync-policy control -----------------------------------------
+    def set_sync_policy(self, policy, **knobs) -> None:
+        """Queue a live sync-policy switch (family by name, or a ready
+        policy instance); honoured at the next round boundary.  Everything
+        downstream — carry path, ring sizing, staleness damping — re-derives
+        from the new policy automatically."""
+        if self.fleet is None:
+            raise ValueError("live sync-policy switching requires fleet mode "
+                             "(ScaDLESConfig.fleet)")
+        self.fleet.set_policy(policy, **knobs)
+
+    def reconfigure_sync(self, **knobs) -> None:
+        """Queue knob changes (e.g. ``semi_sync_k=4``) on the live policy."""
+        if self.fleet is None:
+            raise ValueError("live sync reconfiguration requires fleet mode "
+                             "(ScaDLESConfig.fleet)")
+        self.fleet.reconfigure(**knobs)
 
     @property
     def sim_time_s(self) -> float:

@@ -23,6 +23,15 @@ import dataclasses
 import numpy as np
 
 
+def effective_bandwidth_Bps(bandwidth_gbps: float,
+                            bandwidth_efficiency: float) -> float:
+    """Effective link rate in bytes/s: line rate scaled by the calibrated
+    allreduce efficiency.  The single source of the Gbps->B/s conversion —
+    the clock, the fleet engine's per-link model, and any future calibration
+    must all agree on it."""
+    return bandwidth_gbps * 1e9 / 8 * bandwidth_efficiency
+
+
 @dataclasses.dataclass
 class EdgeClockConfig:
     bandwidth_gbps: float = 5.0
@@ -35,6 +44,11 @@ class EdgeClockConfig:
     n_devices: int = 16
     grad_floats: float = 60.2e6           # model size (ResNet152 default)
 
+    @property
+    def effective_bw_Bps(self) -> float:
+        return effective_bandwidth_Bps(self.bandwidth_gbps,
+                                       self.bandwidth_efficiency)
+
 
 @dataclasses.dataclass
 class EdgeClock:
@@ -45,8 +59,7 @@ class EdgeClock:
         n = self.cfg.n_devices
         ring = 2 * (n - 1) / n
         bytes_ = ring * 4.0 * floats_on_wire
-        eff_bw = self.cfg.bandwidth_gbps * 1e9 / 8 * self.cfg.bandwidth_efficiency
-        return bytes_ / eff_bw
+        return bytes_ / self.cfg.effective_bw_Bps
 
     def compute_time(self, local_batch: float) -> float:
         return (self.cfg.compute_sec_per_iter
@@ -56,10 +69,9 @@ class EdgeClock:
              floats_on_wire: float, extra_bytes: float = 0.0) -> float:
         # injection broadcast bytes ride the same overlay as the allreduce, so
         # they see the same effective (efficiency-scaled) bandwidth
-        eff_bw = self.cfg.bandwidth_gbps * 1e9 / 8 * self.cfg.bandwidth_efficiency
         dt = (wait_s + self.compute_time(local_batch)
               + self.comm_time(floats_on_wire)
-              + extra_bytes / eff_bw)
+              + extra_bytes / self.cfg.effective_bw_Bps)
         self.time_s += dt
         return dt
 

@@ -1,10 +1,15 @@
 # repro.fleet: discrete-event heterogeneous edge-fleet simulation.
+from repro.fleet.control import (  # noqa: F401
+    ControlAction, HillClimbController, SyncController, make_controller,
+)
 from repro.fleet.devices import (  # noqa: F401
     ASYNC, AUTO, BACKUP_WORKERS, BOUNDED_STALENESS, CARRY_POLICIES, FULL_SYNC,
     LOCKSTEP, PER_DEVICE, PRESETS, SEMI_SYNC, DeviceProfile, FleetConfig,
     is_homogeneous, make_fleet,
 )
-from repro.fleet.engine import FleetEngine, RoundResult  # noqa: F401
+from repro.fleet.engine import (  # noqa: F401
+    FleetEngine, RoundResult, RoundTelemetry,
+)
 from repro.fleet.events import (  # noqa: F401
     COMM_DONE, COMPUTE_DONE, DEVICE_DOWN, STREAM_READY, Event, EventQueue,
 )

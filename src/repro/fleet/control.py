@@ -1,0 +1,247 @@
+"""Adaptive synchronization controllers: the fleet's live control plane.
+
+The engine (PR 4) exposes a reconfigurable policy stack — mutable knobs
+behind ``SyncPolicy.reconfigure`` and a round-boundary-deferred
+``FleetEngine.set_policy`` — plus a rolling ``RoundTelemetry`` window.  A
+``SyncController`` closes the loop: it watches realised telemetry + training
+loss and retunes the commit granularity online, so the operator no longer
+has to guess the right policy for a fleet whose stream rates, churn, and
+compute heterogeneity drift over time.
+
+``HillClimbController`` is the first controller, after ADSP (Hu, Wang & Wu:
+tune the commit rate online from realised throughput) and DISTREAL (Rapp et
+al.: runtime resource-aware adaptation).  It treats the semi-sync barrier
+size ``k`` as a single axis spanning the whole consistency spectrum —
+``k=1`` is fully-async, ``k=n`` is full-sync — and hill-climbs it to
+maximise **loss progress per simulated second**, measured over fixed windows
+of engine rounds on an EWMA-smoothed loss.  Two design rules:
+
+* **Start relaxed.**  Exploration cost is asymmetric: a window of relaxed
+  rounds is cheap (commits gate on the fastest arrivals) while a window of
+  synchronous rounds costs a full straggler barrier per round.  The
+  controller therefore starts at the relaxed end (``k=1`` unless
+  ``controller_start_k`` says otherwise) and *tightens the barrier only when
+  a probe window proves it pays*; ties prefer the smaller k.
+* **Escalate families at the edges.**  A reference that settles at ``k=1``
+  runs as the ``async`` policy, at ``k>=n`` as ``full-sync``; probes in
+  between run as ``semi-sync``.  Family switches ride the same deferred
+  ``set_policy`` path as knob changes, so every move lands on a round
+  boundary.
+
+Controllers are configured from ``FleetConfig.controller`` fields and driven
+by the trainer via ``FleetEngine.controller_update(loss)`` once per round.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional
+
+from repro.fleet.devices import ASYNC, FULL_SYNC, SEMI_SYNC, FleetConfig
+from repro.fleet.policies import Async, SemiSync, SyncPolicy
+
+# hill-climb phases
+_REF = "ref"        # measuring the reference configuration's objective
+_PROBE = "probe"    # measuring a candidate k
+_CONFIRM = "confirm"  # re-measuring the reference to bracket the probe
+_SETTLE = "settle"  # tracking the reference, re-probing periodically
+
+
+@dataclasses.dataclass(frozen=True)
+class ControlAction:
+    """A controller decision, applied via the engine's deferred path:
+    ``policy`` switches the family (None keeps it), ``knobs`` reconfigure
+    the target policy."""
+    policy: Optional[str] = None
+    knobs: Dict[str, float] = dataclasses.field(default_factory=dict)
+    reason: str = ""
+
+
+class SyncController:
+    """Interface: observe per-round telemetry + loss, emit policy actions."""
+
+    name: str = "abstract"
+
+    def start_policy(self, cfg: FleetConfig,
+                     n_devices: int) -> Optional[SyncPolicy]:
+        """Policy to install at engine construction; None keeps
+        ``cfg.policy``.  Lets a controller own its starting point instead of
+        inheriting a static guess."""
+        return None
+
+    def update(self, telemetry, loss: float) -> Optional[ControlAction]:
+        """Called once per engine round with the round's telemetry record
+        and the trainer's realised loss; returns an action or None."""
+        raise NotImplementedError
+
+
+class HillClimbController(SyncController):
+    """ADSP-style windowed hill climb over the semi-sync barrier size."""
+
+    name = "hill-climb"
+
+    def __init__(self, n_devices: int, window: int = 4, tol: float = 0.05,
+                 start_k: Optional[int] = None, probe_every: int = 6):
+        self.n = max(int(n_devices), 1)
+        self.window = max(int(window), 1)
+        self.tol = float(tol)
+        self.probe_every = max(int(probe_every), 1)
+        self.ref_k = min(max(1 if start_k is None else int(start_k), 1),
+                         self.n)
+        # hill-climb state: prefer relaxing (smaller k) when exploring
+        self.cand_k: Optional[int] = None
+        self.direction = -1
+        self.step = 1
+        self.phase = _REF
+        self.settled = 0
+        self.ref_obj: Optional[float] = None
+        self.max_obj = 0.0       # largest |objective| seen: noise floor scale
+        self.trend = 0.0         # per-window drift of the reference objective
+        self._cand_obj = 0.0     # probe window's objective, pending confirm
+        self.actions: List[ControlAction] = []       # decision log
+        # window accumulators (EWMA-smoothed loss, sim seconds); the first
+        # window only warms the EWMA up — its objective is transient-skewed.
+        # Windows are measured in *committed gradients* (``window`` fleet-
+        # equivalents), not rounds: an async round commits one gradient and
+        # a full-sync round commits n, so round-counted windows would give a
+        # relaxed policy n-times less evidence (and n-times the variance)
+        # per decision than a synchronous one
+        self._warm = True
+        self._ema: Optional[float] = None
+        self._win_start: Optional[float] = None
+        self._win_dt = 0.0
+        self._win_grads = 0
+
+    # -- lifecycle --------------------------------------------------------
+    def start_policy(self, cfg, n_devices):
+        return Async() if self.ref_k <= 1 else SemiSync(self.ref_k)
+
+    def update(self, telemetry, loss):
+        loss = float(loss)
+        # EWMA weight scales with the commit's share of the fleet: a lone
+        # async committer's (noisy, single-batch) loss moves the estimate
+        # 1/n as much as a full barrier's, so smoothing is uniform in
+        # gradient-time across every k
+        alpha = 1.0 - 0.5 ** (telemetry.n_participants / self.n)
+        if math.isfinite(loss) and alpha > 0.0:
+            self._ema = (loss if self._ema is None
+                         else (1.0 - alpha) * self._ema + alpha * loss)
+        if self._win_start is None:
+            self._win_start = self._ema
+        self._win_dt += telemetry.dt
+        self._win_grads += telemetry.n_participants
+        if self._win_grads < self.window * self.n or self._ema is None:
+            return None
+        # window boundary: loss progress per simulated second
+        obj = (self._win_start - self._ema) / max(self._win_dt, 1e-12)
+        self._win_grads, self._win_dt, self._win_start = 0, 0.0, self._ema
+        self.max_obj = max(self.max_obj, abs(obj))
+        if self._warm:
+            self._warm = False
+            return None
+        act = self._decide(obj)
+        if act is not None:
+            self.actions.append(act)
+        return act
+
+    # -- the climb --------------------------------------------------------
+    def _margin(self, scale: float) -> float:
+        # once training plateaus the objective collapses toward 0 and a
+        # purely relative tolerance would let sign-noise drive the climb;
+        # the floor (tol x the largest |objective| ever seen) keeps moves
+        # that don't clear real, training-scale signal from being accepted
+        return self.tol * abs(scale) + self.tol * self.max_obj
+
+    def _decide(self, obj: float) -> Optional[ControlAction]:
+        if self.phase == _REF:
+            self.ref_obj = obj
+            return self._propose_probe()
+        if self.phase == _PROBE:
+            m = self._margin(self.ref_obj)
+            if self.cand_k < self.ref_k and obj >= self.ref_obj + m:
+                # relaxing and clearly winning even against the raw (drift-
+                # uncorrected) reference: accept without a confirm window
+                return self._accept_move(obj)
+            if self.cand_k > self.ref_k and self.trend >= 0.0 \
+                    and obj < self.ref_obj - m:
+                # tightening and clearly losing while the training curve is
+                # not decaying (decay would deflate a late-measured probe):
+                # reject without a confirm window
+                return self._reject_move()
+            # ambiguous: bracket the probe with a second reference window —
+            # comparing the candidate against the *mean* of the two
+            # surrounding reference windows cancels linear objective drift
+            # (the early-training ramp, the convergence decay)
+            self._cand_obj = obj
+            self.phase = _CONFIRM
+            return self._action_for(self.ref_k, "confirm")
+        if self.phase == _CONFIRM:
+            base = 0.5 * (self.ref_obj + obj)
+            self.trend = 0.5 * self.trend + 0.25 * (obj - self.ref_obj)
+            m = self._margin(base)
+            if self.cand_k < self.ref_k:
+                # relaxing the barrier: accept ties — a smaller k never
+                # commits later, so on a plateau prefer the cheaper barrier
+                ok = self._cand_obj >= base - m
+            else:
+                ok = self._cand_obj > base + m
+            self.ref_obj = obj
+            if ok:
+                return self._accept_move(self._cand_obj)
+            return self._reject_move(already_at_ref=True)
+        # _SETTLE: keep the reference objective (and its drift) fresh — loss
+        # progress rises early and decays toward convergence, and a stale
+        # reference would mis-score every probe against the training curve
+        self.trend = 0.5 * self.trend + 0.5 * (obj - self.ref_obj)
+        self.ref_obj = obj
+        self.settled += 1
+        if self.settled >= self.probe_every:
+            return self._propose_probe()
+        return None
+
+    def _accept_move(self, cand_obj: float) -> ControlAction:
+        self.ref_k, self.ref_obj = self.cand_k, cand_obj
+        self.step *= 2                               # accelerate while winning
+        # one settle window at the new reference, then probe onward
+        self.phase, self.settled = _SETTLE, self.probe_every - 1
+        return self._action_for(self.ref_k, "accept")
+
+    def _reject_move(self, already_at_ref: bool = False):
+        self.phase, self.settled = _SETTLE, 0
+        self.step = 1
+        self.direction = -self.direction
+        if already_at_ref:                           # the confirm window was
+            return None                              # already the revert
+        return self._action_for(self.ref_k, "revert")
+
+    def _propose_probe(self) -> Optional[ControlAction]:
+        for d in (self.direction, -self.direction):
+            k = min(max(self.ref_k + d * self.step, 1), self.n)
+            if k != self.ref_k:
+                self.direction, self.cand_k, self.phase = d, k, _PROBE
+                return self._action_for(k, "probe")
+        self.phase, self.settled = _SETTLE, 0        # n == 1: nothing to tune
+        return None
+
+    def _action_for(self, k: int, reason: str) -> ControlAction:
+        """Map a barrier size to its policy family: the spectrum's edges
+        escalate out of semi-sync entirely."""
+        tag = f"{reason}:k={k}"
+        if k <= 1:
+            return ControlAction(policy=ASYNC, reason=tag)
+        if k >= self.n:
+            return ControlAction(policy=FULL_SYNC, reason=tag)
+        return ControlAction(policy=SEMI_SYNC, knobs={"semi_sync_k": k},
+                             reason=tag)
+
+
+_CONTROLLERS = {"hill-climb": HillClimbController}
+
+
+def make_controller(cfg: FleetConfig, n_devices: int) -> SyncController:
+    if cfg.controller not in _CONTROLLERS:
+        raise ValueError(f"unknown controller {cfg.controller!r}; "
+                         f"options: {sorted(_CONTROLLERS)}")
+    return _CONTROLLERS[cfg.controller](
+        n_devices, window=cfg.controller_window, tol=cfg.controller_tol,
+        start_k=cfg.controller_start_k, probe_every=cfg.controller_probe_every)

@@ -43,7 +43,9 @@ ASYNC = "async"
 
 # policies whose commits can include work started at an older model version
 # (the trainer keeps a parameter-snapshot ring so those gradients are
-# evaluated at the params the device actually read)
+# evaluated at the params the device actually read).  Kept as a constant for
+# reference/compat; the live control plane asks the policy *instance* via
+# ``SyncPolicy.can_carry()`` since the policy can change mid-run.
 CARRY_POLICIES = (BOUNDED_STALENESS, SEMI_SYNC, ASYNC)
 
 LOCKSTEP = "lockstep"      # charge every device the fleet-mean batch (legacy)
@@ -142,6 +144,23 @@ class FleetConfig:
     semi_sync_k: int = 2              # semi-sync: arrivals per barrier group
     churn: bool = False               # enable the availability model
     compute_model: str = AUTO         # lockstep | per-device | auto
+    # --- adaptive-sync control plane (repro.fleet.control) ---
+    # rolling rounds of RoundTelemetry the engine keeps for controllers
+    telemetry_window: int = 32
+    # attach a controller ("hill-climb") that retunes the live policy from
+    # realised loss-progress-per-sim-second; None keeps the static policy.
+    # The controller owns the policy stack: it starts from the relaxed end
+    # of the semi-sync spectrum (cheap rounds => cheap exploration) and
+    # treats ``policy`` as the no-controller fallback.
+    controller: Optional[str] = None
+    # decision window, in fleet-equivalents of *committed gradients* (the
+    # window closes after controller_window * n_devices gradients — ~this
+    # many rounds under full-sync, n times more under async), so every
+    # decision rests on the same evidence whatever the commit granularity
+    controller_window: int = 4
+    controller_tol: float = 0.05      # relative gain needed to accept a move
+    controller_start_k: Optional[int] = None   # initial semi-sync k (None: 1)
+    controller_probe_every: int = 6   # settled windows between re-probes
     # comm-bytes source: None keeps the analytic ring formula (bit-exact with
     # the legacy EdgeClock under homogeneous full-sync); any object exposing
     # ``bytes_for(floats_on_wire) -> bytes`` overrides it — repro.dist.

@@ -40,21 +40,53 @@ round becomes slowest-link-bound, which is how a ring actually degrades.
 parsed from compiled DDP HLO) replaces the analytic byte count with measured
 per-device collective wire bytes; ``None`` keeps the legacy formula and the
 bit-exact EdgeClock equivalence.
+
+Control plane: the engine is *reconfigurable while running*.  ``set_policy``
+/ ``reconfigure`` queue a policy swap or a knob change that is honoured only
+at the next round boundary — the round in progress (and its planning) always
+runs under the policy that started it, mirroring the trainer's
+compression-replay rule for in-flight work.  Every round appends a
+``RoundTelemetry`` record to a rolling window (``telemetry``), and
+``telemetry_summary()`` folds the window into the rates a controller needs:
+commit rate, effective samples/sec, committed-wait fraction, staleness
+distribution.  ``FleetConfig.controller`` attaches a ``repro.fleet.control``
+controller; the trainer feeds it the realised loss via ``controller_update``
+and its actions flow back through the same deferred-reconfiguration path.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List
+from collections import deque
+from typing import Deque, Dict, List, Optional, Union
 
 import numpy as np
 
-from repro.core.simclock import EdgeClockConfig
+from repro.core.simclock import EdgeClockConfig, effective_bandwidth_Bps
 from repro.fleet import events as ev
 from repro.fleet.devices import (LOCKSTEP, DeviceProfile, FleetConfig,
                                  link_gbps)
 from repro.fleet.policies import ChurnProcess, SyncPolicy, make_policy
 
 _MAX_IDLE_RETRIES = 1000
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundTelemetry:
+    """One commit's worth of control-plane signals (rolling-window entry)."""
+    round_index: int
+    policy: str                # policy family that planned this commit
+    knobs: Dict[str, float]    # its knob values at plan time
+    dt: float                  # sim seconds the round took
+    commit_time: float         # absolute commit time
+    n_started: int
+    n_participants: int
+    n_carried: int
+    n_dropped: int
+    n_crashed: int
+    committed_samples: float   # stream samples in the committed gradients
+    committed_wait: float      # realised max wait among committed starters
+    mean_staleness: float      # over this commit's participants
+    max_staleness: int
 
 
 @dataclasses.dataclass
@@ -93,6 +125,21 @@ class FleetEngine:
         self.policy: SyncPolicy = make_policy(cfg)
         self.churn = ChurnProcess(self.profiles, seed=cfg.seed,
                                   enabled=cfg.churn)
+        # control plane: queued policy/knob changes (applied at the next
+        # round boundary), rolling telemetry window, optional controller
+        self._pending_policy: Optional[SyncPolicy] = None
+        self._pending_knobs: Dict[str, float] = {}
+        self.telemetry: Deque[RoundTelemetry] = deque(
+            maxlen=max(int(cfg.telemetry_window), 1))
+        self.controller = None
+        if cfg.controller is not None:
+            from repro.fleet.control import make_controller
+            self.controller = make_controller(cfg, self.n)
+            start = self.controller.start_policy(cfg, self.n)
+            if start is not None:
+                self.policy = start
+        self.policy_switches = 0
+        self._work_batch = np.zeros(self.n)      # batch behind in-flight work
         self.time_s = 0.0
         self.busy_until: Dict[int, float] = {}   # in-flight comm-done times
         self.staleness = np.zeros(self.n, np.int64)
@@ -126,9 +173,103 @@ class FleetEngine:
         else:
             ring = 2 * (self.n - 1) / self.n
             bytes_ = ring * 4.0 * floats_on_wire + extra_bytes
-        eff_bw = (link_gbps(self.profiles[i], self.base.bandwidth_gbps)
-                  * 1e9 / 8 * self.base.bandwidth_efficiency)
+        eff_bw = effective_bandwidth_Bps(
+            link_gbps(self.profiles[i], self.base.bandwidth_gbps),
+            self.base.bandwidth_efficiency)
         return bytes_ / eff_bw
+
+    # -- control plane ----------------------------------------------------
+    def set_policy(self, policy: Union[str, SyncPolicy], **knobs) -> None:
+        """Queue a policy-family switch (by name, using the config's knob
+        defaults, or a ready-made instance).  Honoured at the next round
+        boundary: the in-progress round commits under the policy that
+        started it.  ``knobs`` reconfigure the incoming policy."""
+        new = (make_policy(self.cfg, name=policy)
+               if isinstance(policy, str) else policy)
+        # knob changes already queued via reconfigure() carry over where the
+        # incoming family understands them (explicit knobs in this call win)
+        # rather than being silently dropped
+        carried = {k: v for k, v in self._pending_knobs.items()
+                   if k in new.KNOBS and k not in knobs}
+        if carried:
+            new.reconfigure(**carried)
+        if knobs:
+            new.reconfigure(**knobs)
+        self._pending_policy = new
+        self._pending_knobs = {}
+
+    def reconfigure(self, **knobs) -> None:
+        """Queue knob changes on the current policy (names *and values*
+        validated now, applied at the next round boundary)."""
+        target = self._pending_policy if self._pending_policy is not None \
+            else self.policy
+        knobs = target.validate_knobs(**knobs)
+        if self._pending_policy is not None:
+            self._pending_policy.reconfigure(**knobs)
+        else:
+            self._pending_knobs.update(knobs)
+
+    def _apply_pending(self) -> None:
+        if self._pending_policy is not None:
+            if self._pending_policy.name != self.policy.name or \
+                    self._pending_policy.knobs() != self.policy.knobs():
+                self.policy_switches += 1
+            self.policy = self._pending_policy
+            self._pending_policy = None
+        if self._pending_knobs:
+            pending, self._pending_knobs = self._pending_knobs, {}
+            if pending != {k: self.policy.knobs().get(k) for k in pending}:
+                self.policy_switches += 1
+            self.policy.reconfigure(**pending)
+
+    def controller_update(self, loss: float):
+        """Feed the trainer's realised loss for the latest commit to the
+        attached controller; apply any action it emits through the deferred
+        reconfiguration path.  Returns the action (or None)."""
+        if self.controller is None or not self.telemetry:
+            return None
+        action = self.controller.update(self.telemetry[-1], float(loss))
+        if action is not None:
+            if action.policy is not None:
+                self.set_policy(action.policy, **action.knobs)
+            elif action.knobs:
+                self.reconfigure(**action.knobs)
+        return action
+
+    def telemetry_summary(self) -> Dict[str, float]:
+        """Fold the rolling window into controller-facing rates."""
+        win = list(self.telemetry)
+        if not win:
+            return {}
+        dt = sum(t.dt for t in win)
+        n_part = sum(t.n_participants for t in win)
+        stale = [t.mean_staleness for t in win if t.n_participants]
+        return {
+            "window_rounds": float(len(win)),
+            "window_sim_s": dt,
+            "commit_rate": len(win) / max(dt, 1e-12),
+            "eff_samples_per_s": (sum(t.committed_samples for t in win)
+                                  / max(dt, 1e-12)),
+            "gradients_per_s": n_part / max(dt, 1e-12),
+            "committed_wait_frac": (sum(t.committed_wait for t in win)
+                                    / max(dt, 1e-12)),
+            "mean_staleness": float(np.mean(stale)) if stale else 0.0,
+            "max_staleness": float(max(t.max_staleness for t in win)),
+        }
+
+    def next_policy(self) -> SyncPolicy:
+        """The policy the *next* round will run under — pending switch AND
+        pending knob changes included — what the trainer must size its
+        commit machinery for.  With queued knobs this returns a preview
+        instance; the live policy is still only mutated at the boundary."""
+        if self._pending_policy is not None:
+            return self._pending_policy
+        if self._pending_knobs:
+            preview = make_policy(self.cfg, name=self.policy.name)
+            preview.reconfigure(**{**self.policy.knobs(),
+                                   **self._pending_knobs})
+            return preview
+        return self.policy
 
     # -- trainer-facing state --------------------------------------------
     def active_mask(self) -> np.ndarray:
@@ -141,6 +282,9 @@ class FleetEngine:
     # -- the round --------------------------------------------------------
     def round(self, *, waits: np.ndarray, batches: np.ndarray,
               floats_on_wire: float, extra_bytes: float = 0.0) -> RoundResult:
+        # round boundary: queued policy/knob changes take effect now, so
+        # this round plans (and in-flight work commits) under one policy
+        self._apply_pending()
         T0 = self.time_s
         t_start = T0
         earlier_crashed: List[int] = []
@@ -173,7 +317,9 @@ class FleetEngine:
         crashed = sorted(set(crashed) | {i for i in earlier_crashed
                                          if i not in started_set})
         # fresh starters read the current model version when they began
-        self.read_version[sorted(started_set)] = self.version
+        starters = sorted(started_set)
+        self.read_version[starters] = self.version
+        self._work_batch[starters] = batches[starters]
         stale = {i: int(self.staleness[i]) for i in completions}
         plan = self.policy.plan(completions, stale)
         commit = plan.commit_time
@@ -185,13 +331,16 @@ class FleetEngine:
             self.busy_until[i] = completions[i]
         self.staleness[plan.participants] = 0
         self.staleness[crashed] = 0
+        # cancelled work restarts fresh (a live switch into backup-workers
+        # can cancel a straggler another policy had been carrying)
+        self.staleness[plan.cancelled] = 0
         if plan.carried:
             self.staleness[plan.carried] += 1
 
         part = np.zeros(self.n, bool)
         part[plan.participants] = True
         started = np.zeros(self.n, bool)
-        started[sorted(started_set)] = True
+        started[starters] = True
         # per-commit gradient staleness: commits since each participant read
         # the model (0 for work started and committed in the same round)
         commit_stale = np.full(self.n, -1, np.int64)
@@ -211,10 +360,23 @@ class FleetEngine:
         self.total_participants += len(plan.participants)
         self.total_dropped += len(plan.cancelled)
         self.total_crashed += len(crashed)
+        mean_stale = 0.0
         if plan.participants:
             s_vals = commit_stale[plan.participants]
             self.total_staleness += int(s_vals.sum())
             self.max_staleness = max(self.max_staleness, int(s_vals.max()))
+            mean_stale = float(s_vals.mean())
+        tel = RoundTelemetry(
+            round_index=self.rounds - 1, policy=self.policy.name,
+            knobs=self.policy.knobs(), dt=commit - T0, commit_time=commit,
+            n_started=len(started_set), n_participants=len(plan.participants),
+            n_carried=len(plan.carried), n_dropped=len(plan.cancelled),
+            n_crashed=len(crashed),
+            committed_samples=float(self._work_batch[plan.participants].sum()),
+            committed_wait=max_wait, mean_staleness=mean_stale,
+            max_staleness=int(commit_stale[plan.participants].max(initial=0)))
+        self.telemetry.append(tel)
+        self.policy.observe(tel)
         return RoundResult(dt=commit - T0, commit_time=commit,
                            started=started, part=part, online_frac=online,
                            max_wait=max_wait, crashed=crashed,
@@ -285,4 +447,5 @@ class FleetEngine:
             "fleet_mean_staleness": (self.total_staleness
                                      / max(self.total_participants, 1)),
             "fleet_max_staleness": float(self.max_staleness),
+            "fleet_policy_switches": float(self.policy_switches),
         }

@@ -20,6 +20,14 @@ gradients make it in, and (c) what happens to stragglers:
   full-sync).  Staleness is unbounded here; the trainer bounds its *effect*
   via the parameter-snapshot ring (evicted versions aggregate with weight 0).
 
+Policies are *live* objects: each exposes its tunable knobs (``semi_sync_k``,
+``staleness_bound``, ``quorum_frac``, ``drop_frac``) as mutable, validated
+attributes behind a uniform ``knobs()`` / ``reconfigure(**kw)`` protocol, and
+an ``observe(telemetry)`` hook fed once per engine round.  The engine (and
+the ``repro.fleet.control`` controllers on top of it) reconfigure or swap
+policies between rounds without rebuilding the engine — ``make_policy``
+returns instances meant to be switched out mid-run.
+
 ``ChurnProcess`` is an alternating-renewal availability model (exponential
 up/down durations per device, independent streams) used by the engine for
 join/leave/crash-mid-round with re-admission.
@@ -28,7 +36,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -45,8 +53,49 @@ class CommitPlan:
     carried: List[int]         # work still in flight past the commit
 
 
+def _check_drop_frac(v: float) -> float:
+    if not 0.0 <= v < 1.0:
+        raise ValueError(f"drop_frac must be in [0, 1), got {v}")
+    return float(v)
+
+
+def _check_staleness_bound(v: int) -> int:
+    if v < 1:
+        raise ValueError(f"staleness bound must be >= 1, got {v}")
+    return int(v)
+
+
+def _check_quorum_frac(v: float) -> float:
+    if not 0.0 < v <= 1.0:
+        raise ValueError(f"quorum_frac must be in (0, 1], got {v}")
+    return float(v)
+
+
+def _check_semi_sync_k(v: int) -> int:
+    if v < 1:
+        raise ValueError(f"semi-sync barrier size must be >= 1, got {v}")
+    return int(v)
+
+
+_KNOB_VALIDATORS = {
+    "drop_frac": _check_drop_frac,
+    "staleness_bound": _check_staleness_bound,
+    "quorum_frac": _check_quorum_frac,
+    "semi_sync_k": _check_semi_sync_k,
+}
+
+
 class SyncPolicy:
+    """Stateful, live-reconfigurable commit policy.
+
+    ``KNOBS`` names the attributes a controller may tune at runtime; every
+    knob is validated through ``reconfigure``.  ``observe`` receives the
+    engine's per-round telemetry record after each commit — the default is
+    stateless, but a policy may adapt its own knobs from it.
+    """
+
     name: str = "abstract"
+    KNOBS: Sequence[str] = ()
 
     def plan(self, completions: Dict[int, float],
              staleness: Dict[int, int]) -> CommitPlan:
@@ -54,6 +103,41 @@ class SyncPolicy:
         with work that will finish (absent = crashed/offline this round).
         ``staleness``: rounds each of those devices has gone unaggregated."""
         raise NotImplementedError
+
+    def observe(self, telemetry) -> None:
+        """Per-round hook: ``telemetry`` is the engine's RoundTelemetry."""
+
+    def knobs(self) -> Dict[str, float]:
+        return {k: getattr(self, k) for k in self.KNOBS}
+
+    def validate_knobs(self, **kw) -> Dict[str, float]:
+        """Check knob names and values without applying them; returns the
+        validated mapping.  Lets callers (the engine's deferred path) fail
+        at request time instead of rounds later."""
+        out = {}
+        for k, v in kw.items():
+            if k not in self.KNOBS:
+                raise ValueError(
+                    f"policy {self.name!r} has no knob {k!r}; "
+                    f"tunable: {list(self.KNOBS) or 'none'}")
+            out[k] = _KNOB_VALIDATORS[k](v)
+        return out
+
+    def reconfigure(self, **kw) -> None:
+        # validate everything before applying anything: a bad value must
+        # not leave the policy half-reconfigured
+        for k, v in self.validate_knobs(**kw).items():
+            setattr(self, k, v)
+
+    def ring_depth(self, n_devices: int) -> int:
+        """Parameter-snapshot ring depth this policy needs so in-flight
+        commits can still find the version they read (trainer-side)."""
+        return 2
+
+    def can_carry(self) -> bool:
+        """Whether commits under this policy can include work started at an
+        older model version (=> the trainer must run the snapshot-ring path)."""
+        return False
 
 
 class FullSync(SyncPolicy):
@@ -67,11 +151,10 @@ class FullSync(SyncPolicy):
 class BackupWorkers(SyncPolicy):
     """Commit at the ceil((1-drop_frac)*n)-th completion; cancel the rest."""
     name = BACKUP_WORKERS
+    KNOBS = ("drop_frac",)
 
     def __init__(self, drop_frac: float = 0.125):
-        if not 0.0 <= drop_frac < 1.0:
-            raise ValueError(f"drop_frac must be in [0, 1), got {drop_frac}")
-        self.drop_frac = drop_frac
+        self.drop_frac = _check_drop_frac(drop_frac)
 
     def plan(self, completions, staleness):
         order = sorted(completions, key=lambda i: (completions[i], i))
@@ -85,67 +168,108 @@ class BackupWorkers(SyncPolicy):
 
 class BoundedStaleness(SyncPolicy):
     """Commit once ``quorum_frac`` of workers arrive, but never let any
-    device fall more than ``bound`` rounds behind."""
+    device fall more than ``staleness_bound`` rounds behind."""
     name = BOUNDED_STALENESS
+    KNOBS = ("staleness_bound", "quorum_frac")
 
     def __init__(self, bound: int = 4, quorum_frac: float = 0.5):
-        if bound < 1:
-            raise ValueError(f"staleness bound must be >= 1, got {bound}")
-        self.bound = bound
-        self.quorum_frac = quorum_frac
+        self.staleness_bound = _check_staleness_bound(bound)
+        self.quorum_frac = _check_quorum_frac(quorum_frac)
+
+    @property
+    def bound(self) -> int:                     # pre-refactor alias
+        return self.staleness_bound
 
     def plan(self, completions, staleness):
         order = sorted(completions, key=lambda i: (completions[i], i))
         quorum = max(1, math.ceil(self.quorum_frac * len(order)))
         commit = completions[order[quorum - 1]]
         # devices at the staleness bound must be waited for (SSP barrier)
-        overdue = [i for i in order if staleness.get(i, 0) >= self.bound]
+        overdue = [i for i in order
+                   if staleness.get(i, 0) >= self.staleness_bound]
         if overdue:
             commit = max(commit, max(completions[i] for i in overdue))
         part = [i for i in order if completions[i] <= commit]
         carried = [i for i in order if completions[i] > commit]
         return CommitPlan(commit, part, [], carried)
 
+    def ring_depth(self, n_devices: int) -> int:
+        # a carried gradient is at most ``staleness_bound`` commits stale,
+        # plus slack for the force-wait round itself
+        return max(4, self.staleness_bound + 2)
+
+    def can_carry(self) -> bool:
+        return True
+
 
 class SemiSync(SyncPolicy):
-    """Commit at the k-th earliest arrival; later arrivals stay in flight."""
+    """Commit at the k-th earliest arrival; later arrivals stay in flight.
+    ``semi_sync_k=1`` approaches fully-async; ``semi_sync_k>=n`` recovers
+    full-sync — one mutable knob spans the whole consistency spectrum."""
     name = SEMI_SYNC
+    KNOBS = ("semi_sync_k",)
 
     def __init__(self, k: int = 2):
-        if k < 1:
-            raise ValueError(f"semi-sync barrier size must be >= 1, got {k}")
-        self.k = k
+        self.semi_sync_k = _check_semi_sync_k(k)
+
+    @property
+    def k(self) -> int:                         # pre-refactor alias
+        return self.semi_sync_k
 
     def plan(self, completions, staleness):
         order = sorted(completions, key=lambda i: (completions[i], i))
-        kth = min(self.k, len(order))
+        kth = min(self.semi_sync_k, len(order))
         commit = completions[order[kth - 1]]
         part = [i for i in order if completions[i] <= commit]
         carried = [i for i in order if completions[i] > commit]
         return CommitPlan(commit, part, [], carried)
 
+    def ring_depth(self, n_devices: int) -> int:
+        # steady-state staleness ~ commits per device cycle - 1
+        # = ceil(n/k) - 1; keep a few cycles of slack
+        cycles = math.ceil(n_devices / max(self.semi_sync_k, 1))
+        return max(8, 4 * cycles)
+
+    def can_carry(self) -> bool:
+        return True
+
 
 class Async(SemiSync):
-    """Commit every arrival the moment it lands: semi-sync with k=1."""
+    """Commit every arrival the moment it lands: semi-sync with k pinned
+    to 1 (no knobs — escalate to SemiSync to widen the barrier)."""
     name = ASYNC
+    KNOBS = ()
 
     def __init__(self):
         super().__init__(k=1)
 
 
-def make_policy(cfg: FleetConfig) -> SyncPolicy:
-    if cfg.policy == FULL_SYNC:
+_POLICY_FAMILIES = {
+    FULL_SYNC: FullSync,
+    BACKUP_WORKERS: BackupWorkers,
+    BOUNDED_STALENESS: BoundedStaleness,
+    SEMI_SYNC: SemiSync,
+    ASYNC: Async,
+}
+
+
+def make_policy(cfg: FleetConfig, name: Optional[str] = None) -> SyncPolicy:
+    """Instantiate a live policy from the config's knobs.  ``name`` overrides
+    ``cfg.policy`` so controllers can escalate between families while keeping
+    the operator's other knob settings."""
+    policy = cfg.policy if name is None else name
+    if policy == FULL_SYNC:
         return FullSync()
-    if cfg.policy == BACKUP_WORKERS:
+    if policy == BACKUP_WORKERS:
         return BackupWorkers(cfg.drop_frac)
-    if cfg.policy == BOUNDED_STALENESS:
+    if policy == BOUNDED_STALENESS:
         return BoundedStaleness(cfg.staleness_bound, cfg.quorum_frac)
-    if cfg.policy == SEMI_SYNC:
+    if policy == SEMI_SYNC:
         return SemiSync(cfg.semi_sync_k)
-    if cfg.policy == ASYNC:
+    if policy == ASYNC:
         return Async()
-    raise ValueError(f"unknown sync policy {cfg.policy!r}; options: "
-                     f"{[FULL_SYNC, BACKUP_WORKERS, BOUNDED_STALENESS, SEMI_SYNC, ASYNC]}")
+    raise ValueError(f"unknown sync policy {policy!r}; options: "
+                     f"{sorted(_POLICY_FAMILIES)}")
 
 
 # ---------------------------------------------------------------------------

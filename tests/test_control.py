@@ -1,0 +1,312 @@
+"""repro.fleet control plane: live policy knobs, round-boundary deferred
+reconfiguration, telemetry, the hill-climb controller, and conservation /
+cycle-equivalence of the trainer across live policy switches."""
+import numpy as np
+import pytest
+
+from repro.core.simclock import EdgeClock, EdgeClockConfig
+from repro.fleet import (Async, BackupWorkers, BoundedStaleness, DeviceProfile,
+                         FleetConfig, FleetEngine, FullSync, HillClimbController,
+                         SemiSync, make_controller, make_policy)
+
+
+# ---------------------------------------------------------------------------
+# policy protocol
+
+
+def test_policy_knobs_and_reconfigure():
+    p = SemiSync(k=2)
+    assert p.knobs() == {"semi_sync_k": 2}
+    p.reconfigure(semi_sync_k=5)
+    assert p.semi_sync_k == 5 and p.k == 5          # alias stays in sync
+    with pytest.raises(ValueError):
+        p.reconfigure(semi_sync_k=0)                # validated
+    with pytest.raises(ValueError):
+        p.reconfigure(drop_frac=0.5)                # not this family's knob
+    b = BoundedStaleness(bound=3, quorum_frac=0.5)
+    b.reconfigure(staleness_bound=6, quorum_frac=0.75)
+    assert b.bound == 6 and b.quorum_frac == 0.75
+    with pytest.raises(ValueError):
+        b.reconfigure(staleness_bound=9, quorum_frac=2.0)
+    assert b.bound == 6                             # not half-applied
+    assert Async().KNOBS == ()                      # k pinned to 1
+    assert FullSync().knobs() == {}
+
+
+def test_policy_carry_and_ring_depth():
+    assert not FullSync().can_carry() and not BackupWorkers().can_carry()
+    assert SemiSync(2).can_carry() and Async().can_carry()
+    assert BoundedStaleness(4).can_carry()
+    # ring depth tracks the commit-cycle length: shrinking k needs more
+    assert SemiSync(1).ring_depth(16) > SemiSync(8).ring_depth(16)
+    assert BoundedStaleness(bound=10).ring_depth(4) > \
+        BoundedStaleness(bound=2).ring_depth(4)
+    assert FullSync().ring_depth(16) <= 2
+
+
+def test_make_policy_name_override():
+    cfg = FleetConfig(policy="full-sync", semi_sync_k=7)
+    p = make_policy(cfg, name="semi-sync")
+    assert isinstance(p, SemiSync) and p.semi_sync_k == 7
+    with pytest.raises(ValueError):
+        make_policy(cfg, name="gossip")
+
+
+# ---------------------------------------------------------------------------
+# engine: deferred reconfiguration + telemetry
+
+HETERO = [DeviceProfile(f"d{i}", compute_mult=m)
+          for i, m in enumerate([1.0, 1.5, 2.0, 4.0])]
+BASE4 = EdgeClockConfig(n_devices=4, grad_floats=1e6)
+
+
+def test_engine_set_policy_deferred_to_round_boundary():
+    eng = FleetEngine(FleetConfig(profile=HETERO), BASE4)
+    b, z = np.full(4, 64.0), np.zeros(4)
+    eng.set_policy("semi-sync", semi_sync_k=2)
+    # queued, not applied: the live policy is untouched until a boundary
+    assert eng.policy.name == "full-sync"
+    assert eng.next_policy().name == "semi-sync"
+    res = eng.round(waits=z, batches=b, floats_on_wire=1e6)
+    assert eng.policy.name == "semi-sync"           # applied at the boundary
+    assert res.part.sum() == 2                      # and planned this round
+    assert eng.policy_switches == 1
+    # queued knob changes survive a family switch when the new family
+    # understands them (explicit set_policy knobs would win)
+    eng.reconfigure(semi_sync_k=3)
+    eng.set_policy("semi-sync")
+    assert eng.next_policy().semi_sync_k == 3
+
+
+def test_engine_reconfigure_deferred_and_validated():
+    eng = FleetEngine(FleetConfig(profile=HETERO, policy="semi-sync",
+                                  semi_sync_k=2), BASE4)
+    b, z = np.full(4, 64.0), np.zeros(4)
+    eng.round(waits=z, batches=b, floats_on_wire=1e6)
+    eng.reconfigure(semi_sync_k=3)
+    assert eng.policy.semi_sync_k == 2              # still the old knob
+    with pytest.raises(ValueError):
+        eng.reconfigure(quorum_frac=0.5)            # wrong family
+    with pytest.raises(ValueError):
+        eng.reconfigure(semi_sync_k=0)              # bad value fails NOW,
+    assert eng._pending_knobs == {"semi_sync_k": 3}  # nothing wedged
+    # the preview policy reflects the queued knob change
+    assert eng.next_policy().semi_sync_k == 3
+    assert eng.policy.semi_sync_k == 2              # live one untouched
+    act = eng.active_mask()
+    res = eng.round(waits=z, batches=b * act, floats_on_wire=1e6)
+    assert eng.policy.semi_sync_k == 3
+    assert res.part.sum() == 3
+
+
+def test_engine_telemetry_window_and_summary():
+    eng = FleetEngine(FleetConfig(profile=HETERO, policy="semi-sync",
+                                  semi_sync_k=2, telemetry_window=3), BASE4)
+    b, z = np.full(4, 64.0), np.zeros(4)
+    for _ in range(5):
+        act = eng.active_mask()
+        eng.round(waits=z, batches=b * act, floats_on_wire=1e6)
+    assert len(eng.telemetry) == 3                  # rolling window
+    t = eng.telemetry[-1]
+    assert t.policy == "semi-sync" and t.knobs == {"semi_sync_k": 2}
+    assert t.n_participants >= 1 and t.dt > 0
+    s = eng.telemetry_summary()
+    assert s["window_rounds"] == 3
+    assert s["commit_rate"] > 0 and s["eff_samples_per_s"] > 0
+    assert s["gradients_per_s"] > 0
+
+
+def test_engine_switch_into_backup_workers_cancels_carried_work():
+    profs = [DeviceProfile(f"d{i}", compute_mult=m)
+             for i, m in enumerate([1.0, 1.0, 1.0, 10.0])]
+    eng = FleetEngine(FleetConfig(profile=profs, policy="semi-sync",
+                                  semi_sync_k=3, drop_frac=0.25), BASE4)
+    b, z = np.full(4, 64.0), np.zeros(4)
+    res = eng.round(waits=z, batches=b, floats_on_wire=1e6)
+    assert res.carried == [3]
+    eng.set_policy("backup-workers")
+    act = eng.active_mask()
+    res2 = eng.round(waits=z, batches=b * act, floats_on_wire=1e6)
+    # the carried straggler is cancelled by the new policy and starts fresh
+    assert res2.dropped == [3]
+    assert int(eng.staleness[3]) == 0
+    assert eng.active_mask()[3]
+
+
+# ---------------------------------------------------------------------------
+# trainer: live switches stay conservative and cycle-equivalent
+
+
+@pytest.fixture(scope="module")
+def small_setup():
+    from repro.data import ClassClusterData, DeviceDataSource
+
+    def make_model(d_in=32 * 32 * 3, hidden=32, classes=10):
+        import jax
+        import jax.numpy as jnp
+
+        def init(key):
+            k1, k2 = jax.random.split(key)
+            return {"w1": jax.random.normal(k1, (d_in, hidden)) * 0.02,
+                    "b1": jnp.zeros(hidden),
+                    "w2": jax.random.normal(k2, (hidden, classes)) * 0.02,
+                    "b2": jnp.zeros(classes)}
+
+        def per_sample_loss(p, x, y):
+            import jax.numpy as jnp
+            h = jax.nn.relu(x.reshape(x.shape[0], -1) @ p["w1"] + p["b1"])
+            logits = h @ p["w2"] + p["b2"]
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
+            return lse - gold
+
+        return {"init": init, "per_sample_loss": per_sample_loss}
+
+    data = ClassClusterData(num_classes=10, train_per_class=48,
+                            test_per_class=8, noise=0.8, seed=0)
+    src = DeviceDataSource(data, 8, iid=True)
+    return make_model(), src
+
+
+def test_trainer_live_switch_cycle_equivalent_on_homogeneous(small_setup):
+    """On a zero-wait homogeneous fleet every arrival ties, so any live
+    switch (full-sync -> semi-sync -> async -> full-sync) must keep commits
+    fleet-wide with zero staleness: bit-exact sim time vs the legacy
+    lockstep clock and the same losses as the never-switched trainer."""
+    from repro.core import ScaDLESConfig, ScaDLESTrainer
+    model, src = small_setup
+    kw = dict(n_devices=8, dist="S1", weighted=True, b_max=64,
+              grad_floats=60.2e6)
+    legacy = ScaDLESTrainer(model, src, ScaDLESConfig(**kw))
+    sw = ScaDLESTrainer(model, src, ScaDLESConfig(
+        fleet=FleetConfig(profile="k80-uniform"), **kw))
+    legacy.run(12)
+    sw.run(3)
+    sw.set_sync_policy("semi-sync", semi_sync_k=4)
+    sw.run(3)
+    sw.set_sync_policy("async")
+    sw.run(3)
+    sw.set_sync_policy("full-sync")
+    sw.run(3)
+    assert sw.sim_time_s == pytest.approx(legacy.sim_time_s, rel=1e-9)
+    assert sw.fleet.policy_switches == 3
+    for h_l, h_s in zip(legacy.history, sw.history):
+        assert h_s["loss"] == pytest.approx(h_l["loss"], rel=1e-3, abs=1e-4)
+        assert h_s["mean_stale"] == 0.0
+
+
+def test_trainer_live_k_change_and_async_switch_conserve_batches(small_setup):
+    """A mid-run semi_sync_k change and a semi-sync -> async family switch
+    keep the stream-batch books balanced: every device's streamed samples
+    are on the queue, trained, or dropped — never duplicated or lost."""
+    from repro.core import ScaDLESConfig, ScaDLESTrainer
+    from repro.data import ClassClusterData, DeviceDataSource
+    model, _ = small_setup
+    data = ClassClusterData(num_classes=10, train_per_class=24,
+                            test_per_class=4, noise=0.8, seed=0)
+    src = DeviceDataSource(data, 6, iid=True)
+    fl = FleetConfig(profile="jetson-mixed", policy="semi-sync",
+                     semi_sync_k=4, churn=True)
+    tr = ScaDLESTrainer(model, src, ScaDLESConfig(
+        n_devices=6, dist="S1", weighted=True, b_max=64,
+        grad_floats=60.2e6, fleet=fl))
+    tr.run(6)
+    tr.reconfigure_sync(semi_sync_k=2)
+    tr.run(6)
+    tr.set_sync_policy("async")
+    tr.run(12)
+    s = tr.summary()
+    assert s["fleet_policy_switches"] == 2
+    assert s["fleet_version"] == 24
+    assert s["fleet_mean_staleness"] > 0           # relaxed commits happened
+    assert np.isfinite(tr.history[-1]["loss"])
+    for b in tr.buffers:
+        assert b.total_consumed >= -1e-9
+        assert b.size == pytest.approx(
+            b.total_streamed - b.total_consumed - b.total_dropped, abs=1e-6)
+
+
+def test_trainer_switch_into_backup_workers_refunds_carried_straggler(
+        small_setup):
+    """A live switch into backup-workers cancels a straggler another policy
+    was carrying: it loses its gradient, never its samples."""
+    from repro.core import ScaDLESConfig, ScaDLESTrainer
+    from repro.data import ClassClusterData, DeviceDataSource
+    model, _ = small_setup
+    data = ClassClusterData(num_classes=10, train_per_class=24,
+                            test_per_class=4, noise=0.8, seed=0)
+    src = DeviceDataSource(data, 4, iid=True)
+    # slow enough that its in-flight work lands after the fresh barrier in
+    # the switch round (so backup-workers cancels rather than commits it)
+    profs = [DeviceProfile(f"d{i}", compute_mult=m)
+             for i, m in enumerate([1.0, 1.0, 1.0, 30.0])]
+    fl = FleetConfig(profile=profs, policy="semi-sync", semi_sync_k=3,
+                     drop_frac=0.25)
+    tr = ScaDLESTrainer(model, src, ScaDLESConfig(
+        n_devices=4, dist="S1", weighted=True, b_max=64,
+        grad_floats=60.2e6, fleet=fl))
+    tr.run(1)                                      # straggler carried
+    assert 3 in tr.fleet.busy_until
+    tr.set_sync_policy("backup-workers")
+    tr.run(5)                                      # cancelled every round now
+    b = tr.buffers[3]
+    assert b.total_consumed == pytest.approx(0.0)
+    assert b.size == pytest.approx(b.total_streamed)
+    for i in range(3):
+        assert tr.buffers[i].total_consumed > 0
+
+
+# ---------------------------------------------------------------------------
+# controller
+
+
+def test_make_controller_rejects_unknown():
+    with pytest.raises(ValueError):
+        make_controller(FleetConfig(controller="pid"), 4)
+    c = make_controller(FleetConfig(controller="hill-climb",
+                                    controller_window=3,
+                                    controller_start_k=2), 8)
+    assert isinstance(c, HillClimbController)
+    assert c.window == 3 and c.ref_k == 2
+    assert isinstance(c.start_policy(FleetConfig(), 8), SemiSync)
+    assert isinstance(
+        make_controller(FleetConfig(controller="hill-climb"), 8)
+        .start_policy(FleetConfig(), 8), Async)
+
+
+def test_engine_controller_actions_ride_deferred_path():
+    eng = FleetEngine(FleetConfig(profile=HETERO, controller="hill-climb",
+                                  controller_window=1), BASE4)
+    assert eng.policy.name == "async"              # controller's start point
+    b, z = np.full(4, 64.0), np.zeros(4)
+    for i in range(40):
+        act = eng.active_mask()
+        eng.round(waits=z, batches=b * act, floats_on_wire=1e6)
+        eng.controller_update(2.0 * 0.95 ** i)
+    # the controller probed (actions were emitted) and every applied move
+    # landed on a round boundary via set_policy/reconfigure
+    assert len(eng.controller.actions) > 0
+    assert eng.policy.name in ("async", "semi-sync", "full-sync")
+
+
+def test_controller_converges_to_k1_on_zero_wait_fleet(small_setup):
+    """Homogeneous zero-wait fleet: arrivals tie, every k behaves like
+    full-sync, and the tie-prefers-relaxed rule must walk the reference to
+    the k=1 end — while sim time stays bit-exact with the legacy clock."""
+    from repro.core import ScaDLESConfig, ScaDLESTrainer
+    model, src = small_setup
+    kw = dict(n_devices=8, dist="S1", weighted=True, b_max=64,
+              grad_floats=60.2e6)
+    legacy = ScaDLESTrainer(model, src, ScaDLESConfig(**kw))
+    ctrl = ScaDLESTrainer(model, src, ScaDLESConfig(
+        fleet=FleetConfig(profile="k80-uniform", controller="hill-climb",
+                          controller_start_k=4), **kw))
+    legacy.run(120)
+    ctrl.run(120)
+    assert ctrl.sim_time_s == pytest.approx(legacy.sim_time_s, rel=1e-9)
+    # ties commit the whole fleet whatever k the controller explores
+    assert ctrl.summary()["fleet_part_rate"] == 1.0
+    assert ctrl.summary()["fleet_max_staleness"] == 0.0
+    # and the reference converged to the relaxed end of the spectrum
+    assert ctrl.fleet.controller.ref_k == 1
+    assert ctrl.fleet.policy.name == "async"
