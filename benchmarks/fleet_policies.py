@@ -19,8 +19,13 @@ so the perf trajectory is diffable across commits (CI uploads it).
 bytes: ``repro.dist.calibrate`` lowers the DDP program for this device count
 in a subprocess (cached under ``artifacts/perf/``), parses the per-device
 collective bytes, and plugs the result into ``FleetConfig.comm_model`` — the
-policy table regenerated with measured bytes instead of the modelled clock
-(ROADMAP "calibrated-fleet experiments").
+policy table regenerated with measured bytes instead of the modelled clock.
+Calibrated tables archive under ``artifacts/fleet/calibrated/`` next to the
+analytic one.
+
+``--sweep`` loops ``--calibrated`` over (arch, D, cr) combos (ROADMAP
+"calibrated-fleet experiments") with a reduced per-combo table (S1,
+k80-uniform + jetson-mixed), archiving one calibrated table per combo.
 """
 import argparse
 import time
@@ -36,39 +41,33 @@ PROFILES = ("k80-uniform", "jetson-mixed", "phone-flaky")
 POLICIES = ("full-sync", "backup-workers", "bounded-staleness")
 DISTS = ("S1", "S1p")
 
+SWEEP_ARCHS = ("qwen1.5-0.5b", "qwen2-0.5b")
+SWEEP_DS = (8, 16)
+SWEEP_CRS = (0.1, 0.25)
 
-def run_one(profile: str, policy: str, dist: str, comm_model=None):
+
+def run_one(profile: str, policy: str, dist: str, comm_model=None,
+            n_devices: int = N_DEVICES):
     fleet = FleetConfig(profile=profile, policy=policy, drop_frac=0.25,
                         staleness_bound=4, churn=(profile != "k80-uniform"),
                         comm_model=comm_model)
-    cfg = ScaDLESConfig(n_devices=N_DEVICES, dist=dist, weighted=True,
+    cfg = ScaDLESConfig(n_devices=n_devices, dist=dist, weighted=True,
                         policy=TRUNCATION, b_max=128, base_lr=0.05,
                         grad_floats=60.2e6, fleet=fleet)
     out = run_trainer(cfg, STEPS, loss_target=TARGET)
     return out
 
 
-def main():
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--calibrated", action="store_true",
-                    help="source comm bytes from a (cached) HLO calibration "
-                         "instead of the analytic ring formula")
-    ap.add_argument("--arch", default="qwen1.5-0.5b",
-                    help="architecture to calibrate wire bytes from")
-    args = ap.parse_args()
-    comm_model = None
-    if args.calibrated:
-        from repro.dist.calibrate import calibrate
-        comm_model = calibrate(args.arch, n_devices=N_DEVICES)
-        print(f"# calibrated: {args.arch} D={N_DEVICES} dense_wire_bytes="
-              f"{comm_model.dense_wire_bytes:.3e}")
+def table_rows(comm_model=None, n_devices: int = N_DEVICES,
+               dists=DISTS, profiles=PROFILES, policies=POLICIES,
+               tag: str = ""):
     rows = []
-    for dist in DISTS:
-        for profile in PROFILES:
+    for dist in dists:
+        for profile in profiles:
             base_t = None
-            for policy in POLICIES:
+            for policy in policies:
                 t0 = time.perf_counter()
-                out = run_one(profile, policy, dist, comm_model)
+                out = run_one(profile, policy, dist, comm_model, n_devices)
                 us = (time.perf_counter() - t0) * 1e6
                 t_target = out["time_to_target"]
                 if policy == "full-sync":
@@ -77,7 +76,7 @@ def main():
                            if base_t and t_target not in (0, float("inf"))
                            else float("nan"))
                 s = out["trainer"].summary()
-                emit(f"fleet_{profile}_{policy}_{dist}", us,
+                emit(f"fleet{tag}_{profile}_{policy}_{dist}", us,
                      f"t_target={t_target:.1f};speedup_x={speedup:.2f};"
                      f"acc={out['acc']:.3f};"
                      f"part={s['fleet_part_rate']:.2f}")
@@ -90,11 +89,66 @@ def main():
                     "crashed": s["fleet_crashed"],
                     "dropped": s["fleet_dropped"],
                 })
-    write_json_artifact("artifacts/fleet/fleet_policies.json",
-                        {"steps": STEPS, "loss_target": TARGET,
-                         "calibrated": bool(args.calibrated),
-                         "arch": args.arch if args.calibrated else None,
-                         "rows": rows})
+    return rows
+
+
+def _calibrated_path(arch: str, n_devices: int, cr: float) -> str:
+    tag = f"{arch.replace('/', '_')}__d{n_devices}__cr{cr}"
+    return f"artifacts/fleet/calibrated/fleet_policies__{tag}.json"
+
+
+def run_sweep():
+    """Archive one calibrated policy table per (arch, D, cr) combo."""
+    from repro.dist.calibrate import calibrate
+    for arch in SWEEP_ARCHS:
+        for n_devices in SWEEP_DS:
+            for cr in SWEEP_CRS:
+                cal = calibrate(arch, n_devices=n_devices, cr=cr)
+                print(f"# calibrated: {arch} D={n_devices} cr={cr} "
+                      f"dense_wire_bytes={cal.dense_wire_bytes:.3e}")
+                rows = table_rows(
+                    comm_model=cal, n_devices=n_devices, dists=("S1",),
+                    profiles=("k80-uniform", "jetson-mixed"),
+                    tag=f"_cal_{arch}_d{n_devices}_cr{cr}")
+                write_json_artifact(
+                    _calibrated_path(arch, n_devices, cr),
+                    {"steps": STEPS, "loss_target": TARGET,
+                     "calibration": cal.to_dict(), "rows": rows})
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--calibrated", action="store_true",
+                    help="source comm bytes from a (cached) HLO calibration "
+                         "instead of the analytic ring formula")
+    ap.add_argument("--arch", default="qwen1.5-0.5b",
+                    help="architecture to calibrate wire bytes from")
+    ap.add_argument("--cr", type=float, default=0.1,
+                    help="compression ratio lowered into the calibration")
+    ap.add_argument("--sweep", action="store_true",
+                    help="loop --calibrated over (arch, D, cr) combos and "
+                         "archive per-combo tables under "
+                         "artifacts/fleet/calibrated/")
+    args = ap.parse_args()
+    if args.sweep:
+        run_sweep()
+        return
+    comm_model = None
+    if args.calibrated:
+        from repro.dist.calibrate import calibrate
+        comm_model = calibrate(args.arch, n_devices=N_DEVICES, cr=args.cr)
+        print(f"# calibrated: {args.arch} D={N_DEVICES} dense_wire_bytes="
+              f"{comm_model.dense_wire_bytes:.3e}")
+    rows = table_rows(comm_model=comm_model)
+    payload = {"steps": STEPS, "loss_target": TARGET,
+               "calibrated": bool(args.calibrated),
+               "arch": args.arch if args.calibrated else None,
+               "rows": rows}
+    if args.calibrated:
+        write_json_artifact(_calibrated_path(args.arch, N_DEVICES, args.cr),
+                            payload)
+    else:
+        write_json_artifact("artifacts/fleet/fleet_policies.json", payload)
 
 
 if __name__ == "__main__":

@@ -1,17 +1,18 @@
-"""End-to-end serving driver: batched requests against a KV-cached decoder.
+"""Continuous-batching serving demo on the repro.serve runtime.
 
     PYTHONPATH=src python examples/serve_batched.py [--arch recurrentgemma-2b]
 
-Builds a reduced model, runs a batch of prompts through prefill + jitted
-single-token decode (ring buffers / recurrent state as the arch dictates) and
-reports tokens/s.  Works for every assigned architecture family.
+Streams requests from the paper's S1 arrival distribution into a 4-slot
+continuous-batching server driving a real reduced model (fused chunked
+prefill + mixed-age slot decode), then prints the serving scorecard.
 """
 import argparse
-import subprocess
-import sys
 
-# Thin wrapper over the production serving launcher (same public API).
-from repro.launch import serve
+from repro.configs import get_config
+from repro.models.transformer import RunCtx, init_params
+from repro.serve import (ContinuousBatchingServer, RequestStream, SlotRunner,
+                         measured_cost_model)
+import jax
 
 
 def main():
@@ -19,9 +20,19 @@ def main():
     ap.add_argument("--arch", default="recurrentgemma-2b")
     ap.add_argument("--gen", type=int, default=32)
     args = ap.parse_args()
-    sys.argv = ["serve", "--arch", args.arch, "--reduced", "--batch", "4",
-                "--prompt-len", "16", "--gen", str(args.gen)]
-    serve.main()
+    cfg = get_config(args.arch).reduced()
+    ctx = RunCtx(remat=False, chunk_q=16, chunk_k=16)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    cache_len = 16 + args.gen
+    cost = measured_cost_model(params, cfg, ctx, max_batch=4,
+                               cache_len=cache_len, prompt_len=16)
+    runner = SlotRunner(params, cfg, ctx, max_batch=4, cache_len=cache_len)
+    stream = RequestStream(dist="S1", n_clients=4, prompt_len=16,
+                           max_new_tokens=args.gen, slo_ttft_s=2.0)
+    _, summary = ContinuousBatchingServer(4, cost, runner=runner).run(
+        stream.generate(horizon_s=4.0))
+    for k, v in summary.items():
+        print(f"{k} = {v:.4f}" if isinstance(v, float) else f"{k} = {v}")
 
 
 if __name__ == "__main__":

@@ -66,6 +66,7 @@ from repro.fleet import events as ev
 from repro.fleet.devices import (LOCKSTEP, DeviceProfile, FleetConfig,
                                  link_gbps)
 from repro.fleet.policies import ChurnProcess, SyncPolicy, make_policy
+from repro.sim import SimClock
 
 _MAX_IDLE_RETRIES = 1000
 
@@ -140,7 +141,7 @@ class FleetEngine:
                 self.policy = start
         self.policy_switches = 0
         self._work_batch = np.zeros(self.n)      # batch behind in-flight work
-        self.time_s = 0.0
+        self._clock = SimClock()                 # shared sim core (repro.sim)
         self.busy_until: Dict[int, float] = {}   # in-flight comm-done times
         self.staleness = np.zeros(self.n, np.int64)
         # per-device model versions: ``version`` counts commits so far and
@@ -156,6 +157,11 @@ class FleetEngine:
         self.total_staleness = 0
         self.max_staleness = 0
         self.idle_advances = 0
+
+    @property
+    def time_s(self) -> float:
+        """Current sim time (monotone; advanced only at round commits)."""
+        return self._clock.now
 
     # -- per-device timing ------------------------------------------------
     def device_compute_time(self, i: int, batch: float,
@@ -354,7 +360,7 @@ class FleetEngine:
         fresh = started & part
         max_wait = float(np.max(waits[fresh])) if fresh.any() else 0.0
 
-        self.time_s = commit
+        self._clock.advance_to(commit)
         self.version += 1
         self.rounds += 1
         self.total_participants += len(plan.participants)

@@ -1,13 +1,8 @@
-"""Event primitives for the fleet engine's discrete-event clock.
+"""Fleet event kinds on the shared discrete-event core (``repro.sim``).
 
-The legacy ``EdgeClock`` advances one lockstep iteration at a time; the fleet
-engine instead schedules *per-device* events on a priority queue and lets the
-sync policy decide when — and at what granularity — a round commits: one
-fleet-wide barrier (full-sync/backup-workers), a quorum (bounded-staleness),
-the first K arrivals (semi-sync), or every single arrival (async).  No new
-event kinds are needed for the relaxed modes: a COMM_DONE the policy does not
-commit simply stays in flight (``busy_until``) and re-enters a later round's
-queue.  Event kinds:
+The queue and event primitives were extracted to ``repro.sim.core`` so the
+serving runtime can schedule requests on the same deterministic heap; this
+module keeps the *fleet vocabulary* — what a training event means:
 
 * ``STREAM_READY``  — device gathered enough streamed samples to start
   (conventional DDL's per-device streaming wait; 0 for ScaDLES);
@@ -17,55 +12,24 @@ queue.  Event kinds:
   stage completes, killing its in-flight work (re-admission is scheduled
   from the churn process's recovery time, not via the queue).
 
+The legacy ``EdgeClock`` advances one lockstep iteration at a time; the fleet
+engine instead schedules *per-device* events on a priority queue and lets the
+sync policy decide when — and at what granularity — a round commits: one
+fleet-wide barrier (full-sync/backup-workers), a quorum (bounded-staleness),
+the first K arrivals (semi-sync), or every single arrival (async).  No new
+event kinds are needed for the relaxed modes: a COMM_DONE the policy does not
+commit simply stays in flight (``busy_until``) and re-enters a later round's
+queue.
+
 Ordering is total: ties in time break by insertion order (FIFO), so runs are
-deterministic for a fixed seed.
+deterministic for a fixed seed — that guarantee now lives in
+``repro.sim.core.EventQueue`` and is shared with ``repro.serve``.
 """
 from __future__ import annotations
 
-import dataclasses
-import heapq
-import itertools
-from typing import Iterator, List, Optional
+from repro.sim.core import Event, EventQueue  # noqa: F401
 
 STREAM_READY = "stream_ready"
 COMPUTE_DONE = "compute_done"
 COMM_DONE = "comm_done"
 DEVICE_DOWN = "device_down"
-
-
-@dataclasses.dataclass(frozen=True, order=True)
-class Event:
-    time: float
-    seq: int = dataclasses.field(compare=True)   # FIFO tie-break
-    kind: str = dataclasses.field(compare=False)
-    device: int = dataclasses.field(compare=False)
-
-
-class EventQueue:
-    """Min-heap of events keyed on (time, insertion order)."""
-
-    def __init__(self) -> None:
-        self._heap: List[Event] = []
-        self._seq = itertools.count()
-
-    def push(self, time: float, kind: str, device: int) -> Event:
-        ev = Event(time=float(time), seq=next(self._seq), kind=kind,
-                   device=device)
-        heapq.heappush(self._heap, ev)
-        return ev
-
-    def pop(self) -> Event:
-        return heapq.heappop(self._heap)
-
-    def peek(self) -> Optional[Event]:
-        return self._heap[0] if self._heap else None
-
-    def __len__(self) -> int:
-        return len(self._heap)
-
-    def __bool__(self) -> bool:
-        return bool(self._heap)
-
-    def drain(self) -> Iterator[Event]:
-        while self._heap:
-            yield heapq.heappop(self._heap)

@@ -1,12 +1,18 @@
-"""Serving launcher: batched autoregressive decoding with KV caches.
+"""Serving launcher: offline batched decoding or streaming continuous batching.
+
+Offline (the classic static batch, now on the fused chunked prefill):
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --reduced \
         --batch 8 --prompt-len 32 --gen 64 [--long-context]
 
-Runs prefill (chunked flash attention) then jitted single-token decode steps
-against the layer-appropriate caches (ring buffers for SWA layers, recurrent
-states for RG-LRU/xLSTM).  ``--long-context`` switches dense archs to their
-sliding-window variant (the long_500k path).
+Streaming (continuous batching under Table-I arrival distributions, with
+per-request deadlines — the ``repro.serve`` runtime driving the real model):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --reduced \
+        --streaming --dist S1 --horizon 8 --max-batch 8
+
+The heavy lifting lives in ``repro.models.decode`` (slot caches, fused
+prefill) and ``repro.serve`` (schedulers, metrics); this is a thin CLI.
 """
 from __future__ import annotations
 
@@ -18,60 +24,55 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.models.decode import decode_step, init_cache, prefill_cross_kv
-from repro.models.transformer import RunCtx, forward_hidden, init_params, logits_fn
+from repro.models.decode import (decode_step, init_cache, prefill_cache,
+                                 prefill_cross_kv)
+from repro.models.transformer import RunCtx, init_params
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen2-0.5b")
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=64)
-    ap.add_argument("--long-context", action="store_true")
-    ap.add_argument("--temperature", type=float, default=1.0)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
-
+def _setup(args):
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
     ctx = RunCtx(remat=False, chunk_q=min(128, args.prompt_len),
                  chunk_k=min(128, args.prompt_len))
-    key = jax.random.PRNGKey(args.seed)
-    params = init_params(key, cfg)
+    # one key per use: init / prompts / audio / sampling must not share a
+    # PRNG stream (a shared key correlates the sampling chain with init)
+    k_init, k_prompt, k_audio, k_sample = jax.random.split(
+        jax.random.PRNGKey(args.seed), 4)
+    params = init_params(k_init, cfg)
+    return cfg, ctx, params, k_prompt, k_audio, k_sample
+
+
+def run_offline(args):
+    cfg, ctx, params, k_prompt, k_audio, k_sample = _setup(args)
     pattern = cfg.pattern_for_long_context() if args.long_context else None
 
     cache_len = args.prompt_len + args.gen
     cache = init_cache(cfg, args.batch, cache_len, ctx, pattern=pattern)
-    extras = {}
     if cfg.family == "audio":
-        extras["audio_feats"] = jax.random.normal(
-            key, (args.batch, cfg.encoder_seq_len, cfg.d_model))
-        cache = prefill_cross_kv(params, extras["audio_feats"], cfg, ctx, cache)
+        feats = jax.random.normal(
+            k_audio, (args.batch, cfg.encoder_seq_len, cfg.d_model))
+        cache = prefill_cross_kv(params, feats, cfg, ctx, cache)
 
-    toks = jax.random.randint(key, (args.batch, args.prompt_len), 0,
+    toks = jax.random.randint(k_prompt, (args.batch, args.prompt_len), 0,
                               cfg.vocab_size)
-
     step_jit = jax.jit(
         lambda p, c, t: decode_step(p, c, t, cfg, ctx, pattern=pattern))
+    prefill_jit = jax.jit(
+        lambda p, c, t: prefill_cache(p, t, c, cfg, ctx, pattern=pattern))
 
-    # prefill by stepping the cache through the prompt (cache-exact; a
-    # production prefill fuses this via forward_hidden + cache writes)
     t0 = time.time()
-    logits = None
-    for i in range(args.prompt_len):
-        logits, cache = step_jit(params, cache, toks[:, i:i + 1])
+    logits, cache = jax.block_until_ready(prefill_jit(params, cache, toks))
     t_prefill = time.time() - t0
 
     out = []
-    key_s = key
+    key_s = k_sample
     t0 = time.time()
-    for i in range(args.gen):
+    for _ in range(args.gen):
         key_s, sk = jax.random.split(key_s)
         if args.temperature > 0:
-            nxt = jax.random.categorical(sk, logits / args.temperature, axis=-1)
+            nxt = jax.random.categorical(sk, logits / args.temperature,
+                                         axis=-1)
         else:
             nxt = jnp.argmax(logits, axis=-1)
         out.append(np.asarray(nxt))
@@ -81,6 +82,70 @@ def main():
     print(f"arch={cfg.name} batch={args.batch} prefill={t_prefill:.2f}s "
           f"decode={dt:.2f}s ({toks_s:.1f} tok/s) cache_len={cache_len}")
     print("sample:", np.stack(out, 1)[0][:16])
+
+
+def run_streaming(args):
+    from repro.serve import (ContinuousBatchingServer, RequestStream,
+                             SlotRunner, measured_cost_model)
+    cfg, ctx, params, _, _, _ = _setup(args)
+    pattern = cfg.pattern_for_long_context() if args.long_context else None
+    cache_len = args.prompt_len + args.gen
+    cost = measured_cost_model(params, cfg, ctx, args.max_batch, cache_len,
+                               args.prompt_len, pattern=pattern)
+    runner = SlotRunner(params, cfg, ctx, args.max_batch, cache_len,
+                        pattern=pattern, temperature=args.temperature,
+                        seed=args.seed)
+    stream = RequestStream(dist=args.dist, n_clients=args.clients,
+                           prompt_len=args.prompt_len,
+                           max_new_tokens=args.gen,
+                           slo_ttft_s=args.slo_ttft, seed=args.seed)
+    requests = stream.generate(args.horizon)
+    recs, summary = ContinuousBatchingServer(
+        args.max_batch, cost, runner=runner).run(requests)
+    print(f"arch={cfg.name} dist={args.dist} clients={args.clients} "
+          f"requests={summary['n_requests']} "
+          f"decode_step={cost.decode_step_s * 1e3:.1f}ms "
+          f"prefill={cost.prefill_s(args.prompt_len) * 1e3:.1f}ms")
+    for k in ("completed", "deadline_met", "dropped", "slo_attainment",
+              "ttft_p50_s", "ttft_p99_s", "tpot_p50_s",
+              "throughput_tok_s", "goodput_tok_s"):
+        v = summary[k]
+        print(f"  {k} = {v:.4f}" if isinstance(v, float) else
+              f"  {k} = {v}")
+    done = [r for r in recs if r.completed]
+    if done:
+        toks = runner.generated[done[0].rid]
+        print("sample:", np.asarray(toks[:16]))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--reduced", action="store_true")
+    mode = ap.add_mutually_exclusive_group()
+    mode.add_argument("--offline", action="store_true",
+                      help="static batch, fused prefill + lockstep decode "
+                           "(default)")
+    mode.add_argument("--streaming", action="store_true",
+                      help="continuous batching under Table-I arrivals")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=64)
+    ap.add_argument("--long-context", action="store_true")
+    ap.add_argument("--temperature", type=float, default=1.0)
+    ap.add_argument("--seed", type=int, default=0)
+    # streaming knobs
+    ap.add_argument("--dist", default="S1", help="Table-I distribution")
+    ap.add_argument("--clients", type=int, default=16)
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--horizon", type=float, default=8.0,
+                    help="arrival window (sim seconds)")
+    ap.add_argument("--slo-ttft", type=float, default=0.75)
+    args = ap.parse_args()
+    if args.streaming:
+        run_streaming(args)
+    else:
+        run_offline(args)
 
 
 if __name__ == "__main__":

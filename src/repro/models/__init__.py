@@ -2,4 +2,7 @@ from repro.models.transformer import (  # noqa: F401
     RunCtx, forward_hidden, init_params, layer_sigs, lm_loss, logits_fn,
     param_count_tree, stack_plan,
 )
-from repro.models.decode import decode_step, init_cache  # noqa: F401
+from repro.models.decode import (  # noqa: F401
+    decode_step, init_cache, init_slot_cache, prefill_cache, slot_evict,
+    slot_insert,
+)

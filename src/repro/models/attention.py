@@ -298,7 +298,12 @@ def context_parallel_attention(q, k, v, mesh, cp_axis: str, *, kind: str,
 
 def decode_attention(q, k_cache, v_cache, kv_len, *, kind: str = "causal",
                      window: int = 0):
-    """Single-token attention. q (b, 1, h, hd); caches (b, S, kv, hd)."""
+    """Single-token attention. q (b, 1, h, hd); caches (b, S, kv, hd).
+
+    ``kv_len`` is a scalar (whole-batch cache length) or a (b,) vector of
+    per-slot lengths — continuous batching decodes requests of mixed age in
+    one step, each slot masking its own valid prefix.
+    """
     b, _, h, hd = q.shape
     _, S, kvh, _ = k_cache.shape
     g = h // kvh
@@ -306,8 +311,9 @@ def decode_attention(q, k_cache, v_cache, kv_len, *, kind: str = "causal",
     qh = q.reshape(b, kvh, g, hd)
     s = jnp.einsum("bkgd,bskd->bkgs", qh, k_cache,
                    preferred_element_type=jnp.float32) * scale
-    valid = jnp.arange(S)[None] < kv_len  # (1, S)
-    s = jnp.where(valid[None, None], s, NEG_INF)
+    lens = jnp.reshape(jnp.asarray(kv_len), (-1, 1))     # (1,1) or (b,1)
+    valid = jnp.arange(S)[None, :] < lens                # (1,S) or (b,S)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache)
     return o.reshape(b, 1, h, hd)

@@ -1,0 +1,7 @@
+# repro.serve: continuous-batching streaming inference on the shared sim core.
+from repro.serve.engine import (  # noqa: F401
+    DEADLINE, REQUEST_ARRIVAL, ContinuousBatchingServer, SlotRunner,
+    StaticBatchingServer, StepCostModel, measured_cost_model,
+)
+from repro.serve.metrics import RequestRecord, summarize  # noqa: F401
+from repro.serve.requests import Request, RequestStream  # noqa: F401

@@ -1,0 +1,354 @@
+"""Batching schedulers on the shared discrete-event core (``repro.sim``).
+
+Two disciplines over the same slot-cache decode path:
+
+* :class:`ContinuousBatchingServer` — admit-on-free-slot: a request is
+  prefilled (fused chunked prefill) into any free slot the moment one
+  exists, so requests of mixed age decode together in one jitted step.
+  Per-request deadlines are armed as DEADLINE events on the queue; a
+  running request whose deadline fires is *evicted* (drop-on-SLO-miss),
+  freeing its slot for work that can still meet its SLO.
+* :class:`StaticBatchingServer` — the legacy discipline: wait until
+  ``batch`` requests are queued (or arrivals are exhausted), prefill them
+  all, decode until the *last* one finishes, release everything, repeat.
+  No admission mid-flight, no eviction — early finishers squat in their
+  slots while stragglers decode.
+
+Time is simulated on ``repro.sim.SimClock`` + ``EventQueue`` — the same
+primitives the fleet engine schedules training rounds on — with step costs
+from a :class:`StepCostModel` (measured from the real jitted functions by
+``measured_cost_model``, or synthetic for deterministic tests).  The device
+model is a single accelerator: a prefill or a decode step occupies it
+exclusively, so admission stalls in-flight decode by the prefill's cost —
+which is exactly the tradeoff continuous batching navigates.
+
+Execution is optional and orthogonal: attach a :class:`SlotRunner` and the
+scheduler *actually decodes* (slot caches, per-slot lengths, greedy or
+temperature sampling) while the clock runs on the cost model; leave it off
+and the same scheduling decisions are made purely in sim time (benchmarks
+sweep arrival distributions this way).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+import numpy as np
+
+from repro.serve.metrics import RequestRecord, summarize
+from repro.serve.requests import Request
+from repro.sim import EventQueue, SimClock
+
+REQUEST_ARRIVAL = "request_arrival"
+DEADLINE = "deadline"
+
+
+@dataclasses.dataclass(frozen=True)
+class StepCostModel:
+    """Sim-seconds charged per scheduler action (single-accelerator model)."""
+    decode_step_s: float              # one jitted decode step, whole batch
+    prefill_token_s: float            # fused chunked prefill, per prompt token
+    prefill_base_s: float = 0.0       # dispatch overhead per prefill call
+
+    def prefill_s(self, prompt_len: int) -> float:
+        return self.prefill_base_s + self.prefill_token_s * prompt_len
+
+
+def measured_cost_model(params, cfg, ctx, max_batch: int, cache_len: int,
+                        prompt_len: int, reps: int = 3,
+                        pattern=None) -> StepCostModel:
+    """Time the real jitted decode step + fused prefill on this host."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models.decode import (decode_step, init_cache, init_slot_cache,
+                                     prefill_cache)
+    cache = init_slot_cache(cfg, max_batch, cache_len, ctx, pattern=pattern)
+    toks = jnp.zeros((max_batch, 1), jnp.int32)
+    step = jax.jit(
+        lambda p, c, t: decode_step(p, c, t, cfg, ctx, pattern=pattern))
+    pre = jax.jit(
+        lambda p, c, t: prefill_cache(p, t, c, cfg, ctx, pattern=pattern))
+    ptoks = jnp.zeros((1, prompt_len), jnp.int32)
+    pcache = init_cache(cfg, 1, cache_len, ctx, pattern=pattern)
+    pcache["pos"] = jnp.zeros((1,), jnp.int32)
+
+    def _time(fn, *a):
+        jax.block_until_ready(fn(*a))          # compile
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            jax.block_until_ready(fn(*a))
+        return (time.perf_counter() - t0) / reps
+
+    t_step = _time(step, params, cache, toks)
+    t_pre = _time(pre, params, pcache, ptoks)
+    return StepCostModel(decode_step_s=t_step,
+                         prefill_token_s=t_pre / prompt_len)
+
+
+class SlotRunner:
+    """Real slot-cache execution behind a scheduler (optional).
+
+    Owns the ``max_batch``-slot cache, the jitted fused prefill and decode
+    step, per-slot next-token state, and the sampling chain.  Prompt tokens
+    are synthesized per request id (each request gets its own fold of the
+    prompt key — requests are distinguishable but reproducible).
+    """
+
+    def __init__(self, params, cfg, ctx, max_batch: int, cache_len: int,
+                 pattern=None, temperature: float = 0.0, seed: int = 0):
+        import jax
+        import jax.numpy as jnp
+
+        from repro.models.decode import (decode_step, init_cache,
+                                         init_slot_cache, prefill_cache,
+                                         slot_insert)
+        self._jax, self._jnp = jax, jnp
+        self.cfg, self.ctx = cfg, ctx
+        self.params = params
+        self.max_batch, self.cache_len = max_batch, cache_len
+        self.temperature = temperature
+        self.cache = init_slot_cache(cfg, max_batch, cache_len, ctx,
+                                     pattern=pattern)
+        self._step = jax.jit(
+            lambda p, c, t: decode_step(p, c, t, cfg, ctx, pattern=pattern))
+        self._prefill = jax.jit(
+            lambda p, c, t: prefill_cache(p, t, c, cfg, ctx, pattern=pattern))
+        self._insert = slot_insert
+        self._init_one = lambda: _with_vec_pos(
+            init_cache(cfg, 1, cache_len, ctx, pattern=pattern), jnp)
+        # per-use PRNG streams, split once from the seed (never reuse the
+        # root key across prompts / sampling — see launch.serve)
+        root = jax.random.PRNGKey(seed)
+        self._prompt_key, self._sample_key = jax.random.split(root)
+        self.next_tok = jnp.zeros((max_batch,), jnp.int32)
+        self.generated: Dict[int, List[int]] = {}
+        self._slot_rid = [None] * max_batch
+
+    def prompt_tokens(self, req: Request):
+        key = self._jax.random.fold_in(self._prompt_key, req.rid)
+        return self._jax.random.randint(
+            key, (1, req.prompt_len), 0, self.cfg.vocab_size)
+
+    def _sample(self, logits):
+        if self.temperature > 0:
+            self._sample_key, sk = self._jax.random.split(self._sample_key)
+            return self._jax.random.categorical(
+                sk, logits / self.temperature, axis=-1)
+        return self._jnp.argmax(logits, axis=-1)
+
+    def admit(self, slot: int, req: Request) -> None:
+        """Fused prefill + slot insert; samples the request's first token."""
+        logits, src = self._prefill(self.params, self._init_one(),
+                                    self.prompt_tokens(req))
+        self.cache = self._insert(self.cache, slot, src)
+        first = int(self._sample(logits)[0])
+        self.next_tok = self.next_tok.at[slot].set(first)
+        self.generated[req.rid] = [first]
+        self._slot_rid[slot] = req.rid
+
+    def step(self, active_slots: List[int]) -> None:
+        """One decode step over the whole slot batch; records new tokens for
+        the active slots only (free slots ride along, output ignored)."""
+        logits, self.cache = self._step(self.params, self.cache,
+                                        self.next_tok[:, None])
+        nxt = self._sample(logits)
+        self.next_tok = nxt.astype(self._jnp.int32)
+        for s in active_slots:
+            rid = self._slot_rid[s]
+            if rid is not None:
+                self.generated[rid].append(int(nxt[s]))
+
+    def release(self, slot: int) -> None:
+        self._slot_rid[slot] = None
+
+
+def _with_vec_pos(cache, jnp):
+    cache["pos"] = jnp.zeros((1,), jnp.int32)
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# schedulers
+
+
+class _ServerBase:
+    def __init__(self, max_batch: int, cost: StepCostModel,
+                 runner: Optional[SlotRunner] = None):
+        if runner is not None and runner.max_batch != max_batch:
+            raise ValueError(f"runner has {runner.max_batch} slots, "
+                             f"scheduler wants {max_batch}")
+        self.max_batch = max_batch
+        self.cost = cost
+        self.runner = runner
+
+    def _prime(self, requests: List[Request]):
+        clock, q = SimClock(), EventQueue()
+        recs: Dict[int, RequestRecord] = {}
+        reqs: Dict[int, Request] = {}
+        for r in requests:
+            q.push(r.arrival_s, REQUEST_ARRIVAL, r.rid)
+            reqs[r.rid] = r
+            recs[r.rid] = RequestRecord(
+                rid=r.rid, arrival_s=r.arrival_s, deadline_s=r.deadline_s,
+                target_tokens=r.max_new_tokens, slo_ttft_s=r.slo_ttft_s)
+        return clock, q, recs, reqs
+
+    @staticmethod
+    def _drop_expired(waiting: Deque[Request], recs, now: float):
+        """Deadline-aware queue shedding: a request whose TTFT budget (or
+        completion deadline) is already blown can never contribute goodput —
+        admitting it would only burn slot time.  The static baseline is
+        deadline-blind and never calls this."""
+        kept: Deque[Request] = deque()
+        for r in waiting:
+            if now > min(r.deadline_s, r.arrival_s + r.slo_ttft_s):
+                recs[r.rid].dropped = "expired_in_queue"
+            else:
+                kept.append(r)
+        return kept
+
+
+class ContinuousBatchingServer(_ServerBase):
+    """Admit-on-free-slot scheduler with deadline eviction."""
+
+    def run(self, requests: List[Request],
+            horizon_s: Optional[float] = None):
+        clock, q, recs, reqs = self._prime(requests)
+        waiting: Deque[Request] = deque()
+        active: Dict[int, Request] = {}          # slot -> request
+        free = list(range(self.max_batch))[::-1]  # pop() yields slot 0 first
+
+        def drain(now: float):
+            while q and q.peek().time <= now + 1e-12:
+                e = q.pop()
+                if e.kind == REQUEST_ARRIVAL:
+                    waiting.append(reqs[e.actor])
+                elif e.kind == DEADLINE:
+                    self._evict(e.actor, active, recs, free)
+
+        while q or waiting or active:
+            drain(clock.now)
+            waiting = self._drop_expired(waiting, recs, clock.now)
+            # admit-on-free-slot: chunked prefill occupies the device, so
+            # each admission charges its cost before the next decode step.
+            # Re-check expiry per admission — earlier prefills in this burst
+            # advanced the clock, and admitting a request whose own prefill
+            # would land its first token past budget only burns slot time.
+            while free and waiting:
+                r = waiting.popleft()
+                if (clock.now + self.cost.prefill_s(r.prompt_len)
+                        > r.arrival_s + r.slo_ttft_s
+                        or clock.now > r.deadline_s):
+                    recs[r.rid].dropped = "expired_in_queue"
+                    continue
+                slot = free.pop()
+                rec = recs[r.rid]
+                rec.admit_s = clock.now
+                clock.advance_by(self.cost.prefill_s(r.prompt_len))
+                if self.runner is not None:
+                    self.runner.admit(slot, r)
+                rec.first_token_s = clock.now
+                rec.tokens_out = 1
+                active[slot] = r
+                if r.max_new_tokens <= 1:
+                    self._finish(slot, active, recs, free, clock.now)
+                else:
+                    q.push(r.deadline_s, DEADLINE, r.rid)
+                drain(clock.now)
+            if active:
+                clock.advance_by(self.cost.decode_step_s)
+                if self.runner is not None:
+                    self.runner.step(sorted(active))
+                for slot in sorted(active):
+                    rec = recs[active[slot].rid]
+                    rec.tokens_out += 1
+                    if rec.tokens_out >= rec.target_tokens:
+                        self._finish(slot, active, recs, free, clock.now)
+                drain(clock.now)
+            elif q:
+                clock.advance_to(q.peek().time)
+            # else: waiting must be empty too (no active => slots were free)
+        horizon = max(clock.now, horizon_s or 0.0)
+        return list(recs.values()), summarize(list(recs.values()), horizon)
+
+    def _finish(self, slot, active, recs, free, now):
+        r = active.pop(slot)
+        recs[r.rid].finish_s = now
+        free.append(slot)
+        if self.runner is not None:
+            self.runner.release(slot)
+
+    def _evict(self, rid, active, recs, free):
+        for slot, r in list(active.items()):
+            if r.rid == rid and recs[rid].finish_s is None:
+                active.pop(slot)
+                free.append(slot)
+                recs[rid].dropped = "slo_miss"
+                if self.runner is not None:
+                    self.runner.release(slot)
+
+
+class StaticBatchingServer(_ServerBase):
+    """Legacy discipline: fill the batch, decode to the slowest straggler."""
+
+    def run(self, requests: List[Request],
+            horizon_s: Optional[float] = None):
+        clock, q, recs, reqs = self._prime(requests)
+        waiting: Deque[Request] = deque()
+        active: Dict[int, Request] = {}
+
+        def drain(now: float):
+            while q and q.peek().time <= now + 1e-12:
+                e = q.pop()
+                if e.kind == REQUEST_ARRIVAL:
+                    waiting.append(reqs[e.actor])
+
+        while q or waiting or active:
+            drain(clock.now)
+            # deadline-blind: the legacy server admits everything in order,
+            # including requests whose SLO is already unmeetable
+            if not active:
+                if waiting and (len(waiting) >= self.max_batch or not q):
+                    for slot in range(min(self.max_batch, len(waiting))):
+                        r = waiting.popleft()
+                        rec = recs[r.rid]
+                        rec.admit_s = clock.now
+                        clock.advance_by(self.cost.prefill_s(r.prompt_len))
+                        if self.runner is not None:
+                            self.runner.admit(slot, r)
+                        rec.first_token_s = clock.now
+                        rec.tokens_out = 1
+                        if r.max_new_tokens <= 1:
+                            rec.finish_s = clock.now
+                            if self.runner is not None:
+                                self.runner.release(slot)
+                        else:
+                            active[slot] = r
+                elif q:
+                    clock.advance_to(q.peek().time)
+                else:
+                    break       # nothing waiting, nothing arriving
+                continue
+            # decode until the whole batch is done — no admission mid-flight;
+            # finished requests squat their slots but generate nothing more
+            live = [s for s in sorted(active)
+                    if recs[active[s].rid].finish_s is None]
+            clock.advance_by(self.cost.decode_step_s)
+            if self.runner is not None:
+                self.runner.step(live)
+            for slot in live:
+                rec = recs[active[slot].rid]
+                rec.tokens_out += 1
+                if rec.tokens_out >= rec.target_tokens:
+                    rec.finish_s = clock.now        # slot stays squatted
+            if all(recs[r.rid].finish_s is not None
+                   for r in active.values()):
+                if self.runner is not None:
+                    for slot in active:
+                        self.runner.release(slot)
+                active.clear()
+        horizon = max(clock.now, horizon_s or 0.0)
+        return list(recs.values()), summarize(list(recs.values()), horizon)

@@ -1,0 +1,86 @@
+"""Serving metrics: TTFT / TPOT percentiles, throughput and goodput.
+
+* **TTFT** — first-token latency: sim seconds from arrival to the first
+  generated token (includes queueing + prefill; the batching discipline's
+  fingerprint).
+* **TPOT** — time per output token after the first (decode cadence).
+* **throughput** — all generated tokens per second, deadline-blind.
+* **goodput** — tokens of requests that *completed within their deadline*
+  per second: tokens burned on a request that was evicted, or that finished
+  late, count for nothing.  This is the serving analogue of the trainer's
+  effective-samples metric, and the headline number of
+  ``benchmarks/serving.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class RequestRecord:
+    """Per-request lifecycle timestamps (sim seconds)."""
+    rid: int
+    arrival_s: float
+    deadline_s: float
+    target_tokens: int
+    slo_ttft_s: float = float("inf")
+    admit_s: Optional[float] = None       # prefill started
+    first_token_s: Optional[float] = None
+    finish_s: Optional[float] = None      # all target tokens generated
+    tokens_out: int = 0
+    dropped: Optional[str] = None         # "expired_in_queue" | "slo_miss"
+
+    @property
+    def completed(self) -> bool:
+        return self.finish_s is not None and self.dropped is None
+
+    @property
+    def met_deadline(self) -> bool:
+        """Both SLO clauses: first token in budget, completion by deadline."""
+        return (self.completed
+                and self.first_token_s - self.arrival_s
+                <= self.slo_ttft_s + 1e-12
+                and self.finish_s <= self.deadline_s + 1e-12)
+
+    @property
+    def ttft_s(self) -> Optional[float]:
+        if self.first_token_s is None:
+            return None
+        return self.first_token_s - self.arrival_s
+
+    @property
+    def tpot_s(self) -> Optional[float]:
+        if self.finish_s is None or self.first_token_s is None \
+                or self.tokens_out < 2:
+            return None
+        return (self.finish_s - self.first_token_s) / (self.tokens_out - 1)
+
+
+def _pct(vals: List[float], q: float) -> float:
+    return float(np.percentile(np.asarray(vals), q)) if vals else float("nan")
+
+
+def summarize(records: List[RequestRecord], horizon_s: float) -> Dict:
+    """Fold request records into the scheduler-facing scorecard."""
+    n = len(records)
+    ttft = [r.ttft_s for r in records if r.ttft_s is not None]
+    tpot = [r.tpot_s for r in records if r.tpot_s is not None]
+    good_tokens = sum(r.tokens_out for r in records if r.met_deadline)
+    all_tokens = sum(r.tokens_out for r in records)
+    completed = sum(r.completed for r in records)
+    met = sum(r.met_deadline for r in records)
+    horizon = max(horizon_s, 1e-9)
+    return {
+        "n_requests": n,
+        "completed": completed,
+        "deadline_met": met,
+        "dropped": sum(r.dropped is not None for r in records),
+        "slo_attainment": met / n if n else float("nan"),
+        "ttft_p50_s": _pct(ttft, 50), "ttft_p99_s": _pct(ttft, 99),
+        "tpot_p50_s": _pct(tpot, 50), "tpot_p99_s": _pct(tpot, 99),
+        "throughput_tok_s": all_tokens / horizon,
+        "goodput_tok_s": good_tokens / horizon,
+    }

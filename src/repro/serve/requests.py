@@ -1,0 +1,85 @@
+"""Streaming request arrivals from the paper's Table I rate distributions.
+
+ScaDLES models edge devices whose *training* samples stream in at Table I
+rates; serving faces the mirror image — clients whose *prompts* stream in at
+those rates.  A client with token rate ``r`` has gathered a ``prompt_len``
+prompt every ``prompt_len / r`` seconds (``core.streams.streaming_latency``
+applied to tokens instead of samples), so per-client request interarrival is
+exactly the paper's streaming wait; S1 (slow, high-variance uniform) gives a
+sparse trickle and S2 (fast) a near-overload front, which is the regime where
+batching discipline decides goodput (benchmarks/serving.py).
+
+Every request carries an absolute deadline: ``arrival + slo_ttft + slo_tpot *
+max_new_tokens`` — a token-budgeted SLO in the Deep-Edge style.  Schedulers
+drop (or evict) work that cannot meet it; ``metrics.summarize`` counts only
+deadline-met tokens toward goodput.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Union
+
+import numpy as np
+
+from repro.core.streams import TABLE_I, StreamDist
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One generation request in sim time.
+
+    Two SLO clauses gate goodput: the first token must land within
+    ``slo_ttft_s`` of arrival AND the request must complete by
+    ``deadline_s`` (arrival + TTFT budget + per-token budget).
+    """
+    rid: int
+    arrival_s: float
+    prompt_len: int
+    max_new_tokens: int
+    deadline_s: float
+    slo_ttft_s: float = float("inf")
+    client: int = 0
+
+
+@dataclasses.dataclass
+class RequestStream:
+    """Per-client request arrival process on a Table I rate distribution.
+
+    Each of ``n_clients`` samples a token-streaming rate from ``dist`` (same
+    draw semantics as the training-side ``StreamSimulator``); its requests
+    become ready every ``prompt_len / rate`` seconds from a random initial
+    phase.  ``generate`` returns the merged arrival-ordered request list.
+    """
+    dist: Union[str, StreamDist]
+    n_clients: int = 16
+    prompt_len: int = 64
+    max_new_tokens: int = 32
+    slo_ttft_s: float = 0.75
+    slo_tpot_s: float = 0.05
+    seed: int = 0
+
+    def __post_init__(self):
+        if isinstance(self.dist, str):
+            self.dist = TABLE_I[self.dist]
+
+    def deadline_for(self, arrival_s: float) -> float:
+        return (arrival_s + self.slo_ttft_s
+                + self.slo_tpot_s * self.max_new_tokens)
+
+    def generate(self, horizon_s: float) -> List[Request]:
+        rng = np.random.default_rng(self.seed)
+        rates = self.dist.sample(rng, self.n_clients).astype(np.float64)
+        interarrival = self.prompt_len / rates             # streaming_latency
+        phase = rng.uniform(0.0, interarrival)             # desynchronised
+        reqs: List[Request] = []
+        for c in range(self.n_clients):
+            t = float(phase[c])
+            while t < horizon_s:
+                reqs.append(Request(
+                    rid=0, arrival_s=t, prompt_len=self.prompt_len,
+                    max_new_tokens=self.max_new_tokens,
+                    deadline_s=self.deadline_for(t),
+                    slo_ttft_s=self.slo_ttft_s, client=c))
+                t += float(interarrival[c])
+        reqs.sort(key=lambda r: r.arrival_s)
+        return [dataclasses.replace(r, rid=i) for i, r in enumerate(reqs)]

@@ -1,0 +1,6 @@
+# repro.sim: shared discrete-event core (queue + clock).
+#
+# Extracted from repro.fleet.events so the fleet engine and the serving
+# runtime (repro.serve) schedule on the same primitives: a deterministic
+# FIFO-tie-break event heap and a monotone simulation clock.
+from repro.sim.core import Event, EventQueue, SimClock  # noqa: F401
