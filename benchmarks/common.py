@@ -4,11 +4,8 @@ class-clustered data, 8-16 simulated edge devices — the CPU-scale stand-in
 for ResNet152/VGG19+CIFAR)."""
 from __future__ import annotations
 
-import json
-import math
-import os
 import time
-from typing import Callable, Dict, List
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -16,8 +13,12 @@ import numpy as np
 
 from repro.core import ScaDLESConfig, ScaDLESTrainer
 from repro.data import ClassClusterData, DeviceDataSource
+from repro.obs import JsonTracker
 
 ROWS: List[str] = []
+
+#: default provenance seed stamped on artifacts whose sweep fixes seed=0
+ARTIFACT_SEED = 0
 
 
 def emit(name: str, us_per_call: float, derived: str = ""):
@@ -26,22 +27,16 @@ def emit(name: str, us_per_call: float, derived: str = ""):
     print(row, flush=True)
 
 
-def write_json_artifact(path: str, payload: Dict) -> None:
-    """Write a benchmark result payload as strict JSON (CI uploads these):
-    non-finite floats (never-reached targets, undefined speedups) become
-    null, anywhere in the payload."""
-    def clean(v):
-        if isinstance(v, float) and not math.isfinite(v):
-            return None
-        if isinstance(v, dict):
-            return {k: clean(x) for k, x in v.items()}
-        if isinstance(v, (list, tuple)):
-            return [clean(x) for x in v]
-        return v
+def write_json_artifact(path: str, payload: Dict,
+                        seed: Optional[int] = ARTIFACT_SEED) -> None:
+    """Write a benchmark result payload as strict JSON (CI uploads these).
 
-    os.makedirs(os.path.dirname(path), exist_ok=True)
-    with open(path, "w") as f:
-        json.dump(clean(payload), f, indent=1)
+    One path for every ``benchmarks/*.py``: routes through
+    ``repro.obs.JsonTracker.write_artifact``, which cleans the payload
+    (non-finite floats -> null, numpy unwrapped) and stamps it with a
+    ``"run"`` provenance key — git SHA, seed, schema version — so a
+    committed number is attributable months later."""
+    JsonTracker.write_artifact(path, payload, seed=seed)
 
 
 def timeit(fn: Callable, n: int = 5, warmup: int = 2) -> float:

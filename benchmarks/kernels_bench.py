@@ -7,7 +7,7 @@ retention vs exact top-k and the achieved density.
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, timeit
+from benchmarks.common import emit, timeit, write_json_artifact
 from repro.core.compression import sparsify_mask
 from repro.kernels import ops
 from repro.kernels.ref import block_topk_ref
@@ -16,6 +16,7 @@ from repro.kernels.ref import block_topk_ref
 def main():
     n = 1 << 20  # ~1M grads (ResNet-scale slice)
     flat = jax.random.normal(jax.random.PRNGKey(0), (n,))
+    rows = []
     for cr in (0.1, 0.01):
         k = int(cr * n)
         block_fn = jax.jit(lambda f: ops.block_topk_sparsify(f, cr))
@@ -27,6 +28,9 @@ def main():
         ret = float(jnp.sum(sp * sp) / jnp.sum(gl * gl))
         emit(f"kernel_block_topk_cr{cr}", us_b,
              f"retention_vs_global={ret:.4f};global_topk_us={us_g:.0f}")
+        rows.append({"kernel": "block_topk", "cr": cr, "n": n,
+                     "block_us": us_b, "global_us": us_g,
+                     "retention_vs_global": ret})
 
     # fused sgdm: one-pass update vs three-pass jnp
     p = jax.random.normal(jax.random.PRNGKey(1), (n,))
@@ -35,6 +39,9 @@ def main():
     fused = jax.jit(lambda p, m, g: ops.fused_sgdm_flat(p, m, g, 0.1))
     us = timeit(lambda: jax.block_until_ready(fused(p, m, g)), n=3)
     emit("kernel_fused_sgdm_1m", us, "mode=interpret(cpu-correctness)")
+    rows.append({"kernel": "fused_sgdm", "n": n, "us": us,
+                 "mode": "interpret(cpu-correctness)"})
+    write_json_artifact("artifacts/perf/kernels.json", {"rows": rows})
 
 
 if __name__ == "__main__":

@@ -1,0 +1,276 @@
+"""CI perf-regression gate: fresh fast-tier metrics vs ``BENCH_scadles.json``.
+
+Regenerates the repo's headline performance numbers in a few minutes on a
+CPU host, diffs them against the committed baseline with per-metric
+tolerance bands (``repro.obs.regress``), writes a machine-readable report,
+and exits nonzero on any regression — the CI job that keeps the speed
+claims in DESIGN.md honest.
+
+Three collectors, chosen so the gate is *deterministic* wherever possible:
+
+* **training/fleet** — one full-sync ``k80-uniform`` fleet run (the
+  ``fleet_policies.py`` baseline cell) with a ``MemoryTracker`` attached:
+  sim-seconds to the loss target, per-round MFU / step flops / wire bytes
+  from the ``train_round`` ledger records.  All sim-time or model-constant
+  numbers: bit-stable across runs on one toolchain.
+* **serving** — continuous vs static batching on a *synthetic*
+  ``StepCostModel`` under the S2 near-overload stream: deadline-met
+  goodput, SLO attainment, TTFT p95.  Pure discrete-event sim:
+  deterministic.
+* **prefill** — fused one-pass prefill vs the token-by-token loop on the
+  reduced arch: the only wall-clock metric, gated with a wide band that
+  catches catastrophic regressions (losing the fusion) without tripping on
+  CI noise.
+
+Usage::
+
+    python -m benchmarks.perf_gate                  # gate against baseline
+    python -m benchmarks.perf_gate --bless          # re-bless the baseline
+    python -m benchmarks.perf_gate --profile        # + profiler traces
+    python -m benchmarks.perf_gate --report out.json --baseline other.json
+
+Exit status: 0 = every metric within band, 1 = regression or a baseline
+metric the fresh run failed to produce.  ``--bless`` rewrites the baseline
+from the fresh values (stamped with git SHA + seed) and exits 0; commit the
+result when a change is intentionally faster/slower.
+"""
+import argparse
+import sys
+import time
+
+import numpy as np
+
+from repro.obs import (FLEET_ROUND, TRAIN_ROUND, MemoryTracker, MetricSpec,
+                       capture, capture_step, compare, load_baseline,
+                       save_baseline, write_report)
+
+GATE_SEED = 0
+BASELINE_PATH = "BENCH_scadles.json"
+REPORT_PATH = "artifacts/perf_gate/report.json"
+PROFILE_DIR = "artifacts/profiles"
+
+# per-metric band: how each number is allowed to move before the gate trips.
+# direction says which way is *worse*; two-sided metrics are model constants
+# (drift either way means the cost model or the lowering changed — re-bless
+# deliberately, e.g. on a jax upgrade, rather than letting it slide).
+TOLERANCES = {
+    "fleet_t_target_s": dict(
+        tol_frac=0.15, direction="lower",
+        note="sim s to loss target, full-sync k80-uniform S1 (deterministic)"),
+    "fleet_sim_time_s": dict(
+        tol_frac=0.05, direction="two-sided",
+        note="sim s for the whole run: the clock/comm model constant"),
+    "train_step_flops": dict(
+        tol_frac=0.10, direction="two-sided",
+        note="HLO-counted flops of the jitted step; moves only when the "
+             "lowering changes"),
+    "train_mfu_mean": dict(
+        tol_frac=0.25, direction="two-sided",
+        note="mean per-round MFU (sim dt): flops drift tolerance"),
+    "train_samples_per_s_mean": dict(
+        tol_frac=0.10, direction="higher",
+        note="committed samples per sim second"),
+    "train_wire_bytes_round": dict(
+        tol_frac=0.01, direction="two-sided",
+        note="analytic ring-allreduce bytes per round: a formula, not a "
+             "measurement"),
+    "serve_cont_goodput_tok_s": dict(
+        tol_frac=0.05, direction="higher",
+        note="continuous batching deadline-met tok/s, synthetic cost model "
+             "(deterministic)"),
+    "serve_static_goodput_tok_s": dict(
+        tol_frac=0.05, direction="two-sided",
+        note="static baseline goodput: drift means the scheduler changed"),
+    "serve_cont_slo_attainment": dict(
+        tol_frac=0.05, direction="higher",
+        note="fraction of requests meeting both SLO clauses"),
+    "serve_cont_ttft_p95_s": dict(
+        tol_frac=0.10, direction="lower",
+        note="continuous batching TTFT p95 (sim s)"),
+    "prefill_speedup_x": dict(
+        tol_frac=0.85, direction="higher",
+        note="fused vs loop prefill, real wall-clock: wide band, catches "
+             "losing the fusion, not CI noise"),
+    "prefill_max_cache_err": dict(
+        tol_frac=0.0, abs_tol=1e-3, direction="lower",
+        note="fused and loop prefill must fill identical caches"),
+}
+
+
+# ---------------------------------------------------------------------------
+# collectors
+
+
+def collect_training(profile_dir=None):
+    """Full-sync fleet baseline cell with a tracker attached."""
+    from benchmarks.common import run_trainer
+    from repro.core import TRUNCATION, ScaDLESConfig
+    from repro.fleet import FleetConfig
+
+    mt = MemoryTracker()
+    cfg = ScaDLESConfig(
+        n_devices=16, dist="S1", weighted=True, policy=TRUNCATION,
+        b_max=128, base_lr=0.05, grad_floats=60.2e6, seed=GATE_SEED,
+        fleet=FleetConfig(profile="k80-uniform"), tracker=mt)
+    out = run_trainer(cfg, steps=40, loss_target=0.1)
+    s = out["trainer"].summary()
+    rounds = [r["data"] for r in mt.of_kind(TRAIN_ROUND)]
+    mfus = [r["mfu"] for r in rounds if r.get("mfu")]
+    flops = next((r["step_flops"] for r in rounds if r.get("step_flops")),
+                 None)
+    sps = [r["samples_per_s"] for r in rounds]
+    assert mt.of_kind(FLEET_ROUND), "fleet engine emitted no round records"
+
+    if profile_dir:
+        # profiler window around the jitted train step: a short tracked
+        # continuation run, traced (skipped cleanly when the profiler is
+        # unavailable on this install)
+        with capture(f"{profile_dir}/train_step") as rec:
+            out["trainer"].run(2)
+        print(f"# profile train_step: {'captured' if rec else 'skipped'}")
+
+    return {
+        "fleet_t_target_s": out["time_to_target"],
+        "fleet_sim_time_s": s["sim_time_s"],
+        "train_step_flops": flops,
+        "train_mfu_mean": float(np.mean(mfus)) if mfus else None,
+        "train_samples_per_s_mean": float(np.mean(sps)) if sps else None,
+        "train_wire_bytes_round": next(
+            (r["wire_bytes_round"] for r in rounds), None),
+    }
+
+
+def collect_serving():
+    """Continuous vs static on a synthetic cost model: pure sim."""
+    from repro.serve import (ContinuousBatchingServer, RequestStream,
+                             StaticBatchingServer, StepCostModel)
+
+    cost = StepCostModel(decode_step_s=0.01, prefill_token_s=5e-4)
+    reqs = RequestStream(dist="S2", n_clients=12, prompt_len=64,
+                         max_new_tokens=16, slo_ttft_s=0.25,
+                         slo_tpot_s=0.05, seed=GATE_SEED).generate(8.0)
+    _, cont = ContinuousBatchingServer(4, cost).run(reqs)
+    _, stat = StaticBatchingServer(4, cost).run(reqs)
+    return {
+        "serve_cont_goodput_tok_s": cont["goodput_tok_s"],
+        "serve_static_goodput_tok_s": stat["goodput_tok_s"],
+        "serve_cont_slo_attainment": cont["slo_attainment"],
+        "serve_cont_ttft_p95_s": cont["ttft_p95_s"],
+    }
+
+
+def collect_prefill(profile_dir=None, prompt_len=64, reps=3):
+    """Fused vs loop prefill on the reduced arch (real wall-clock)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.models.decode import decode_step, init_cache, prefill_cache
+    from repro.models.transformer import RunCtx, init_params
+
+    cfg = get_config("qwen2-0.5b").reduced()
+    ctx = RunCtx(remat=False, chunk_q=64, chunk_k=64)
+    params = init_params(jax.random.PRNGKey(GATE_SEED), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, prompt_len), 0,
+                              cfg.vocab_size)
+    mk = lambda: init_cache(cfg, 1, prompt_len + 8, ctx)
+    step = jax.jit(lambda p, c, t: decode_step(p, c, t, cfg, ctx))
+    fused = jax.jit(lambda p, c, t: prefill_cache(p, t, c, cfg, ctx))
+
+    def run_loop():
+        cache, lg = mk(), None
+        for i in range(prompt_len):
+            lg, cache = step(params, cache, toks[:, i:i + 1])
+        return lg, cache
+
+    def run_fused():
+        return fused(params, mk(), toks)
+
+    def best_of(fn):
+        jax.block_until_ready(fn())             # compile
+        ts = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            out = jax.block_until_ready(fn())
+            ts.append(time.perf_counter() - t0)
+        return min(ts), out
+
+    t_loop, (lg_l, cache_l) = best_of(run_loop)
+    t_fused, (lg_f, cache_f) = best_of(run_fused)
+    errs = jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                           - b.astype(jnp.float32)))),
+        cache_l, cache_f)
+    max_err = max(max(jax.tree.leaves(errs)),
+                  float(jnp.max(jnp.abs(lg_l - lg_f))))
+
+    if profile_dir:
+        # slot-decode capture window: the same jitted step the serving
+        # schedulers drive, traced one step at a time
+        got = capture_step(lambda: step(params, mk(), toks[:, :1]), (),
+                           f"{profile_dir}/slot_decode")
+        print(f"# profile slot_decode: {'captured' if got else 'skipped'}")
+
+    return {
+        "prefill_speedup_x": t_loop / t_fused,
+        "prefill_max_cache_err": max_err,
+    }
+
+
+def collect(profile_dir=None):
+    metrics = {}
+    for name, fn in (("training", lambda: collect_training(profile_dir)),
+                     ("serving", collect_serving),
+                     ("prefill", lambda: collect_prefill(profile_dir))):
+        t0 = time.perf_counter()
+        metrics.update(fn())
+        print(f"# collected {name} in {time.perf_counter() - t0:.1f}s")
+    return metrics
+
+
+# ---------------------------------------------------------------------------
+# gate
+
+
+def bless(metrics, path):
+    specs = {}
+    for name, value in metrics.items():
+        if value is None:
+            raise SystemExit(f"cannot bless: metric {name!r} came back None")
+        specs[name] = MetricSpec(value=float(value),
+                                 **TOLERANCES.get(name, {}))
+    save_baseline(path, specs, seed=GATE_SEED,
+                  meta={"gate": "benchmarks.perf_gate"})
+    print(f"# blessed {len(specs)} metrics -> {path}")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", default=BASELINE_PATH,
+                    help="blessed baseline to gate against")
+    ap.add_argument("--report", default=REPORT_PATH,
+                    help="machine-readable gate report (CI artifact)")
+    ap.add_argument("--bless", action="store_true",
+                    help="rewrite the baseline from fresh metrics and exit 0")
+    ap.add_argument("--profile", action="store_true",
+                    help="capture JAX profiler traces of the train step and "
+                         f"slot decode under {PROFILE_DIR}/ (skipped when "
+                         "the profiler is unavailable)")
+    args = ap.parse_args(argv)
+
+    metrics = collect(PROFILE_DIR if args.profile else None)
+    if args.bless:
+        bless(metrics, args.baseline)
+        return 0
+
+    _, specs = load_baseline(args.baseline)
+    report = compare(specs, metrics)
+    write_report(args.report, report, baseline_path=args.baseline,
+                 meta={"gate": "benchmarks.perf_gate"})
+    print(report.format_table())
+    print(f"# report -> {args.report}")
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -10,7 +10,7 @@ import glob
 import json
 import os
 
-from benchmarks.common import emit
+from benchmarks.common import emit, write_json_artifact
 
 
 def load_all(out_dir="artifacts/dryrun"):
@@ -32,9 +32,7 @@ def main():
                      ("arch", "shape", "mesh", "roofline", "n_micro",
                       "useful_flops_ratio")}
                     | {"peak_bytes_est": r["memory"].get("peak_bytes_est", 0)})
-    os.makedirs("artifacts/perf", exist_ok=True)
-    with open("artifacts/perf/roofline.json", "w") as f:
-        json.dump(rows, f, indent=1)
+    write_json_artifact("artifacts/perf/roofline.json", {"rows": rows})
     for r in recs:
         t = r["roofline"]
         emit(f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}",

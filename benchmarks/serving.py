@@ -30,7 +30,7 @@ from repro.models.decode import decode_step, init_cache, prefill_cache
 from repro.models.transformer import RunCtx, init_params
 from repro.serve import (ContinuousBatchingServer, RequestStream,
                          StaticBatchingServer, measured_cost_model)
-from repro.serve.metrics import summarize
+from repro.serve.metrics import request_records, summarize
 
 ARCH = "qwen2-0.5b"
 PROMPT_LEN = 128
@@ -101,10 +101,12 @@ def bench_scheduling(cfg, ctx, params):
             emit(f"serve_{mode}_{dist}", horizon * 1e6,
                  f"goodput={s['goodput_tok_s']:.1f};"
                  f"throughput={s['throughput_tok_s']:.1f};"
+                 f"ttft_p95={s['ttft_p95_s']:.3f};"
                  f"ttft_p99={s['ttft_p99_s']:.3f};"
                  f"slo={s['slo_attainment']:.2f};dropped={s['dropped']}")
             rows.append({"mode": mode, "dist": dist, "n_clients": n_clients,
-                         "horizon_s": horizon, **s})
+                         "horizon_s": horizon, **s,
+                         "requests": request_records(recs)})
     return rows, cost
 
 

@@ -18,7 +18,14 @@ round boundary) and the *hill-climb controller*
 on its own from realised loss-progress-per-sim-second.
 
 Run:  PYTHONPATH=src python examples/fleet_churn.py
+      PYTHONPATH=src python examples/fleet_churn.py --track churn.jsonl
+
+``--track`` attaches a ``repro.obs.JsonTracker`` to every trainer in the
+demo: per-round records (loss, MFU, wire bytes, staleness) and fleet commit
+telemetry land on one JSONL run ledger, stamped with git SHA + seed.
 """
+import argparse
+
 import numpy as np
 
 from repro.core import TRUNCATION, ScaDLESConfig, ScaDLESTrainer
@@ -30,6 +37,8 @@ import jax.numpy as jnp
 
 N_DEVICES = 12
 STEPS = 25
+
+TRACKER = None   # set by --track: shared ledger for every run in the demo
 
 
 def make_model(d_in=32 * 32 * 3, hidden=64, classes=10):
@@ -62,7 +71,7 @@ def make_trainer(policy: str, **fleet_kw):
     src = DeviceDataSource(data, N_DEVICES, iid=True)
     tr = ScaDLESTrainer(model, src, ScaDLESConfig(
         n_devices=N_DEVICES, dist="S1", weighted=True, policy=TRUNCATION,
-        b_max=128, grad_floats=60.2e6, seed=0,
+        b_max=128, grad_floats=60.2e6, seed=0, tracker=TRACKER,
         fleet=FleetConfig(profile="phone-flaky", policy=policy,
                           drop_frac=0.25, staleness_bound=4,
                           semi_sync_k=N_DEVICES // 3, churn=True,
@@ -87,6 +96,17 @@ def run(policy: str, steps: int = STEPS, verbose: bool = False):
 
 
 def main():
+    global TRACKER
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--track", metavar="LEDGER",
+                    help="append per-round + fleet-commit records to this "
+                         "JSONL run ledger (stamped with git SHA + seed)")
+    args = ap.parse_args()
+    if args.track:
+        from repro.obs import JsonTracker
+        TRACKER = JsonTracker(args.track, seed=0,
+                              meta={"entry": "examples.fleet_churn",
+                                    "n_devices": N_DEVICES})
     print(f"phone-flaky fleet, {N_DEVICES} devices, churn on")
     # relaxed policies commit fewer gradients per round: scale the step
     # budget so every policy commits a comparable number of gradients
@@ -142,6 +162,10 @@ def main():
     print(f"  settled on {tr.fleet.policy.name} (ref k={ctrl.ref_k})  "
           f"sim_time={tr.sim_time_s:.1f}s  acc={acc:.3f}")
     print(f"  decisions: {[a.reason for a in ctrl.actions]}")
+
+    if TRACKER is not None:
+        TRACKER.finish()
+        print(f"\n# run ledger -> {args.track}")
 
 
 if __name__ == "__main__":

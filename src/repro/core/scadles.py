@@ -30,6 +30,8 @@ from repro.core import simclock
 from repro.core import streams as stream_lib
 from repro.core.weighted_agg import (clip_batch, linear_scaled_lr,
                                      rate_weights, weighted_aggregate)
+from repro.obs.callbacks import RoundObserver
+from repro.obs.tracker import NOOP
 
 
 @dataclasses.dataclass
@@ -72,6 +74,11 @@ class ScaDLESConfig:
     # damp a stale gradient's aggregation weight by 1/(1+s), s = commits the
     # participant's model view is behind (async-SGD staleness compensation)
     staleness_damping: bool = True
+    # observability sink (repro.obs.Tracker).  None keeps the inert NOOP:
+    # no per-round records, no metric assembly, no lowering for flop counts
+    # — tracking is strictly read-only over host-side state, so a tracked
+    # run stays bit-exact with an untracked one (tests enforce this)
+    tracker: Optional[Any] = None
     seed: int = 0
     intra_jitter: float = 0.0
     sample_bytes: int = 3072             # 3 KB / CIFAR image (paper Fig 10)
@@ -109,12 +116,18 @@ class ScaDLESTrainer:
         self.actual_floats = int(actual_floats)
         self.prev_iter_time = 1.0
         self.history: List[Dict[str, float]] = []
+        # observability: per-round records flow through the RoundObserver
+        # (repro.obs) when a tracker is attached; the engine shares the same
+        # sink so fleet_round commits land on the same ledger
+        self.tracker = cfg.tracker if cfg.tracker is not None else NOOP
+        self._obs = RoundObserver(self.tracker, n_devices=cfg.n_devices)
         # fleet mode: event-driven heterogeneous clock replaces the lockstep
         # EdgeClock (lazy import: repro.fleet depends on core.simclock)
         self.fleet = None
         if cfg.fleet is not None:
             from repro import fleet as fleet_lib
-            self.fleet = fleet_lib.FleetEngine(cfg.fleet, self.clock.cfg)
+            self.fleet = fleet_lib.FleetEngine(cfg.fleet, self.clock.cfg,
+                                               tracker=self.tracker)
         self._online_frac = np.ones(cfg.n_devices)
         # relaxed-consistency commits (bounded-staleness / semi-sync / async):
         # a straggler's gradient commits rounds after its work started, and
@@ -486,6 +499,7 @@ class ScaDLESTrainer:
             else:
                 part = avail
                 carry_args = None
+            used_fn = used_args = None    # the jitted step this round ran
             if carry_args is not None and not part.any():
                 # nothing valid to aggregate at this commit (crashed
                 # committer, ring-evicted gradient, or an idle-advance
@@ -512,6 +526,7 @@ class ScaDLESTrainer:
                                  jnp.asarray(agg_w, jnp.float32), use_comp]
                 self.params, self.momentum_state, loss, gap = \
                     step_fn(*step_args)
+                used_fn, used_args = step_fn, step_args
                 if self.compressor:
                     self.compressor.decide(float(gap))     # EWMA update
                     self.compressor.account(use_comp, self.n_floats)
@@ -543,7 +558,19 @@ class ScaDLESTrainer:
                    "inj_bytes": float(inj_bytes), **fleet_rec}
             if eval_every and eval_fn and (t + 1) % eval_every == 0:
                 rec.update(eval_fn(self.params))
+            # observability: assemble + emit the round record only when a
+            # tracker is listening (the noop path must cost nothing)
+            if self._obs.active:
+                self._obs.on_round(
+                    step=t, rec=rec, dt=dt,
+                    step_fn=used_fn, step_args=used_args,
+                    n_part=float(np.sum(part)),
+                    floats_on_wire=floats_wire, inj_bytes=inj_bytes,
+                    comm_model=(self.fleet.comm_model
+                                if self.fleet is not None else None))
             self.history.append(rec)
+        if self._obs.active:
+            self._obs.on_run_end(self.summary())
         return self.history
 
     # live sync-policy control -----------------------------------------

@@ -66,6 +66,8 @@ from repro.fleet import events as ev
 from repro.fleet.devices import (LOCKSTEP, DeviceProfile, FleetConfig,
                                  link_gbps)
 from repro.fleet.policies import ChurnProcess, SyncPolicy, make_policy
+from repro.obs.callbacks import FLEET_ROUND, fleet_round_record
+from repro.obs.tracker import NOOP
 from repro.sim import SimClock
 
 _MAX_IDLE_RETRIES = 1000
@@ -110,9 +112,15 @@ class RoundResult:
 class FleetEngine:
     """Event-queue clock for a heterogeneous fleet; one round per train step."""
 
-    def __init__(self, cfg: FleetConfig, base: EdgeClockConfig):
+    def __init__(self, cfg: FleetConfig, base: EdgeClockConfig,
+                 tracker=None):
         self.cfg = cfg
         self.base = base
+        # observability sink (repro.obs): every commit's RoundTelemetry is
+        # mirrored onto the ledger as a ``fleet_round`` record.  Strictly a
+        # read-only mirror of state the engine computes anyway — attaching a
+        # tracker cannot change a single event time (zero-perturbation).
+        self.tracker = tracker if tracker is not None else NOOP
         self.n = base.n_devices
         self.profiles: List[DeviceProfile] = cfg.resolve_profiles(self.n)
         self.compute_model = cfg.resolve_compute_model(self.profiles)
@@ -383,6 +391,9 @@ class FleetEngine:
             max_staleness=int(commit_stale[plan.participants].max(initial=0)))
         self.telemetry.append(tel)
         self.policy.observe(tel)
+        if self.tracker.active:
+            self.tracker.log_metrics(fleet_round_record(tel),
+                                     step=tel.round_index, kind=FLEET_ROUND)
         return RoundResult(dt=commit - T0, commit_time=commit,
                            started=started, part=part, online_frac=online,
                            max_wait=max_wait, crashed=crashed,

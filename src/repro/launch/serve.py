@@ -100,14 +100,25 @@ def run_streaming(args):
                            max_new_tokens=args.gen,
                            slo_ttft_s=args.slo_ttft, seed=args.seed)
     requests = stream.generate(args.horizon)
+    tracker = None
+    if args.track:
+        from repro.obs import JsonTracker
+        tracker = JsonTracker(
+            args.track, seed=args.seed,
+            meta={"entry": "launch.serve --streaming", "arch": cfg.name,
+                  "dist": args.dist, "clients": args.clients,
+                  "max_batch": args.max_batch})
     recs, summary = ContinuousBatchingServer(
-        args.max_batch, cost, runner=runner).run(requests)
+        args.max_batch, cost, runner=runner, tracker=tracker).run(requests)
+    if tracker is not None:
+        tracker.finish()
+        print(f"# run ledger -> {args.track}")
     print(f"arch={cfg.name} dist={args.dist} clients={args.clients} "
           f"requests={summary['n_requests']} "
           f"decode_step={cost.decode_step_s * 1e3:.1f}ms "
           f"prefill={cost.prefill_s(args.prompt_len) * 1e3:.1f}ms")
     for k in ("completed", "deadline_met", "dropped", "slo_attainment",
-              "ttft_p50_s", "ttft_p99_s", "tpot_p50_s",
+              "ttft_p50_s", "ttft_p95_s", "ttft_p99_s", "tpot_p50_s",
               "throughput_tok_s", "goodput_tok_s"):
         v = summary[k]
         print(f"  {k} = {v:.4f}" if isinstance(v, float) else
@@ -141,6 +152,10 @@ def main():
     ap.add_argument("--horizon", type=float, default=8.0,
                     help="arrival window (sim seconds)")
     ap.add_argument("--slo-ttft", type=float, default=0.75)
+    ap.add_argument("--track", metavar="LEDGER",
+                    help="write a JSONL run ledger (request lifecycle events "
+                         "+ scorecard) to this path, stamped with git SHA "
+                         "and seed")
     args = ap.parse_args()
     if args.streaming:
         run_streaming(args)

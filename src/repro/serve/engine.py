@@ -37,6 +37,8 @@ from typing import Deque, Dict, List, Optional
 
 import numpy as np
 
+from repro.obs.callbacks import SERVE_SUMMARY, serve_event
+from repro.obs.tracker import NOOP
 from repro.serve.metrics import RequestRecord, summarize
 from repro.serve.requests import Request
 from repro.sim import EventQueue, SimClock
@@ -176,13 +178,17 @@ def _with_vec_pos(cache, jnp):
 
 class _ServerBase:
     def __init__(self, max_batch: int, cost: StepCostModel,
-                 runner: Optional[SlotRunner] = None):
+                 runner: Optional[SlotRunner] = None, tracker=None):
         if runner is not None and runner.max_batch != max_batch:
             raise ValueError(f"runner has {runner.max_batch} slots, "
                              f"scheduler wants {max_batch}")
         self.max_batch = max_batch
         self.cost = cost
         self.runner = runner
+        # observability sink (repro.obs): request lifecycle events + the
+        # end-of-run scorecard mirror onto the ledger.  Read-only — sim time
+        # and scheduling decisions are identical with or without a tracker.
+        self.tracker = tracker if tracker is not None else NOOP
 
     def _prime(self, requests: List[Request]):
         clock, q = SimClock(), EventQueue()
@@ -196,8 +202,7 @@ class _ServerBase:
                 target_tokens=r.max_new_tokens, slo_ttft_s=r.slo_ttft_s)
         return clock, q, recs, reqs
 
-    @staticmethod
-    def _drop_expired(waiting: Deque[Request], recs, now: float):
+    def _drop_expired(self, waiting: Deque[Request], recs, now: float):
         """Deadline-aware queue shedding: a request whose TTFT budget (or
         completion deadline) is already blown can never contribute goodput —
         admitting it would only burn slot time.  The static baseline is
@@ -206,9 +211,16 @@ class _ServerBase:
         for r in waiting:
             if now > min(r.deadline_s, r.arrival_s + r.slo_ttft_s):
                 recs[r.rid].dropped = "expired_in_queue"
+                if self.tracker.active:
+                    serve_event(self.tracker, "drop", rid=r.rid, t=now,
+                                reason="expired_in_queue")
             else:
                 kept.append(r)
         return kept
+
+    def _log_summary(self, summary) -> None:
+        if self.tracker.active:
+            self.tracker.log_summary(summary, kind=SERVE_SUMMARY)
 
 
 class ContinuousBatchingServer(_ServerBase):
@@ -252,6 +264,10 @@ class ContinuousBatchingServer(_ServerBase):
                     self.runner.admit(slot, r)
                 rec.first_token_s = clock.now
                 rec.tokens_out = 1
+                if self.tracker.active:
+                    serve_event(self.tracker, "admit", rid=r.rid,
+                                t=rec.admit_s, slot=slot,
+                                ttft_s=rec.first_token_s - rec.arrival_s)
                 active[slot] = r
                 if r.max_new_tokens <= 1:
                     self._finish(slot, active, recs, free, clock.now)
@@ -272,7 +288,9 @@ class ContinuousBatchingServer(_ServerBase):
                 clock.advance_to(q.peek().time)
             # else: waiting must be empty too (no active => slots were free)
         horizon = max(clock.now, horizon_s or 0.0)
-        return list(recs.values()), summarize(list(recs.values()), horizon)
+        summary = summarize(list(recs.values()), horizon)
+        self._log_summary(summary)
+        return list(recs.values()), summary
 
     def _finish(self, slot, active, recs, free, now):
         r = active.pop(slot)
@@ -280,6 +298,9 @@ class ContinuousBatchingServer(_ServerBase):
         free.append(slot)
         if self.runner is not None:
             self.runner.release(slot)
+        if self.tracker.active:
+            serve_event(self.tracker, "finish", rid=r.rid, t=now, slot=slot,
+                        tokens_out=recs[r.rid].tokens_out)
 
     def _evict(self, rid, active, recs, free):
         for slot, r in list(active.items()):
@@ -289,6 +310,11 @@ class ContinuousBatchingServer(_ServerBase):
                 recs[rid].dropped = "slo_miss"
                 if self.runner is not None:
                     self.runner.release(slot)
+                if self.tracker.active:
+                    serve_event(self.tracker, "evict", rid=rid,
+                                t=recs[rid].deadline_s, slot=slot,
+                                reason="slo_miss",
+                                tokens_out=recs[rid].tokens_out)
 
 
 class StaticBatchingServer(_ServerBase):
@@ -351,4 +377,6 @@ class StaticBatchingServer(_ServerBase):
                         self.runner.release(slot)
                 active.clear()
         horizon = max(clock.now, horizon_s or 0.0)
-        return list(recs.values()), summarize(list(recs.values()), horizon)
+        summary = summarize(list(recs.values()), horizon)
+        self._log_summary(summary)
+        return list(recs.values()), summary

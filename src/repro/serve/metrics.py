@@ -63,6 +63,23 @@ def _pct(vals: List[float], q: float) -> float:
     return float(np.percentile(np.asarray(vals), q)) if vals else float("nan")
 
 
+def request_records(records: List[RequestRecord]) -> List[Dict]:
+    """Per-request latency records: the raw material behind the percentiles,
+    serialisable onto a run ledger (``benchmarks/serving.py`` emits these so
+    tail behaviour can be audited without rerunning the sweep)."""
+    return [{
+        "rid": r.rid,
+        "arrival_s": r.arrival_s,
+        "admit_s": r.admit_s,
+        "ttft_s": r.ttft_s,
+        "tpot_s": r.tpot_s,
+        "finish_s": r.finish_s,
+        "tokens_out": r.tokens_out,
+        "dropped": r.dropped,
+        "met_deadline": r.met_deadline,
+    } for r in records]
+
+
 def summarize(records: List[RequestRecord], horizon_s: float) -> Dict:
     """Fold request records into the scheduler-facing scorecard."""
     n = len(records)
@@ -79,8 +96,10 @@ def summarize(records: List[RequestRecord], horizon_s: float) -> Dict:
         "deadline_met": met,
         "dropped": sum(r.dropped is not None for r in records),
         "slo_attainment": met / n if n else float("nan"),
-        "ttft_p50_s": _pct(ttft, 50), "ttft_p99_s": _pct(ttft, 99),
-        "tpot_p50_s": _pct(tpot, 50), "tpot_p99_s": _pct(tpot, 99),
+        "ttft_p50_s": _pct(ttft, 50), "ttft_p95_s": _pct(ttft, 95),
+        "ttft_p99_s": _pct(ttft, 99),
+        "tpot_p50_s": _pct(tpot, 50), "tpot_p95_s": _pct(tpot, 95),
+        "tpot_p99_s": _pct(tpot, 99),
         "throughput_tok_s": all_tokens / horizon,
         "goodput_tok_s": good_tokens / horizon,
     }
