@@ -6,13 +6,17 @@ tolerance bands (``repro.obs.regress``), writes a machine-readable report,
 and exits nonzero on any regression — the CI job that keeps the speed
 claims in DESIGN.md honest.
 
-Three collectors, chosen so the gate is *deterministic* wherever possible:
+Four collectors, chosen so the gate is *deterministic* wherever possible:
 
 * **training/fleet** — one full-sync ``k80-uniform`` fleet run (the
   ``fleet_policies.py`` baseline cell) with a ``MemoryTracker`` attached:
   sim-seconds to the loss target, per-round MFU / step flops / wire bytes
   from the ``train_round`` ledger records.  All sim-time or model-constant
   numbers: bit-stable across runs on one toolchain.
+* **noniid** — the ``noniid_sweep.py`` headline cell pair (semi-sync vs
+  async on Dirichlet(0.05) label-skewed streams): the capped
+  strict-advantage ratio and realised label divergence.  Pure deterministic
+  sim over a seeded partition.
 * **serving** — continuous vs static batching on a *synthetic*
   ``StepCostModel`` under the S2 near-overload stream: deadline-met
   goodput, SLO attainment, TTFT p95.  Pure discrete-event sim:
@@ -87,6 +91,16 @@ TOLERANCES = {
     "serve_cont_ttft_p95_s": dict(
         tol_frac=0.10, direction="lower",
         note="continuous batching TTFT p95 (sim s)"),
+    "noniid_strict_advantage_x": dict(
+        tol_frac=0.05, direction="higher",
+        note="capped async/semi-sync time-to-global-eval-target ratio at "
+             "Dirichlet alpha=0.05 on jetson-mixed: > 1 means strict sync "
+             "converges faster under heavy label skew (deterministic sim; "
+             "the noniid_sweep.py headline regime)"),
+    "noniid_mean_divergence": dict(
+        tol_frac=0.02, direction="two-sided",
+        note="realised mean per-round label divergence of the skewed cell: "
+             "a partitioner/divergence-metric determinism pin"),
     "prefill_speedup_x": dict(
         tol_frac=0.85, direction="higher",
         note="fused vs loop prefill, real wall-clock: wide band, catches "
@@ -137,6 +151,41 @@ def collect_training(profile_dir=None):
         "train_samples_per_s_mean": float(np.mean(sps)) if sps else None,
         "train_wire_bytes_round": next(
             (r["wire_bytes_round"] for r in rounds), None),
+    }
+
+
+def collect_noniid():
+    """The non-IID headline cell pair (benchmarks/noniid_sweep.py):
+    semi-sync k=8 vs async on Dirichlet(0.05) label-skewed streams,
+    jetson-mixed, time to the *global test-loss* target.  Pure deterministic
+    sim — at the crossover learning rate async's one-class commits plateau
+    above the target while semi-sync converges, so the capped advantage
+    ratio pins the regime the sweep demonstrates."""
+    from benchmarks.common import run_noniid_trainer
+    from benchmarks.noniid_sweep import (ADV_CAP, BASE_LR, DIST, EVAL_TARGET,
+                                         N_DEVICES, PRESET)
+    from repro.core import TRUNCATION, ScaDLESConfig
+    from repro.fleet import FleetConfig
+
+    def cell(policy, steps, eval_every, **over):
+        fleet = FleetConfig(profile=PRESET, policy=policy, churn=True, **over)
+        cfg = ScaDLESConfig(n_devices=N_DEVICES, dist=DIST, weighted=True,
+                            policy=TRUNCATION, b_max=128, base_lr=BASE_LR,
+                            grad_floats=60.2e6, seed=GATE_SEED, fleet=fleet,
+                            skew_weighting=True)
+        return run_noniid_trainer(cfg, steps, skew="dirichlet", alpha=0.05,
+                                  eval_every=eval_every,
+                                  eval_target=EVAL_TARGET)
+    semi = cell("semi-sync", 100, 4, semi_sync_k=8)
+    asyn = cell("async", 400, 32)
+    t_semi = semi["time_to_eval_target"]
+    t_async = asyn["time_to_eval_target"]
+    adv = (ADV_CAP if not np.isfinite(t_async)
+           else min(t_async / t_semi, ADV_CAP)) if np.isfinite(t_semi) \
+        else 0.0
+    return {
+        "noniid_strict_advantage_x": adv,
+        "noniid_mean_divergence": semi["mean_divergence"],
     }
 
 
@@ -220,6 +269,7 @@ def collect_prefill(profile_dir=None, prompt_len=64, reps=3):
 def collect(profile_dir=None):
     metrics = {}
     for name, fn in (("training", lambda: collect_training(profile_dir)),
+                     ("noniid", collect_noniid),
                      ("serving", collect_serving),
                      ("prefill", lambda: collect_prefill(profile_dir))):
         t0 = time.perf_counter()

@@ -20,6 +20,12 @@ import numpy as np
 PERSISTENCE = "persistence"
 TRUNCATION = "truncation"
 
+# explicit overflow eviction for capacity-bounded SampleBuffers (paper §IV
+# drops the *oldest* samples when an edge device's memory fills: the stream
+# is freshest-first, so stale frames are the ones sacrificed)
+DROP_OLDEST = "drop-oldest"
+DROP_NEWEST = "drop-newest"
+
 
 def queue_size_eqn2(t_iter: float, rate: float, batch: float, T: int) -> float:
     """Accumulated samples after T steps (Eqn 2), valid for t*S >= b."""
@@ -68,18 +74,54 @@ class CountingBuffer:
 
 
 class SampleBuffer:
-    """FIFO of sample ids (ints into the device-local stream ordering)."""
+    """FIFO of sample ids (ints into the device-local stream ordering).
 
-    def __init__(self, policy: str = PERSISTENCE):
+    ``max_size`` bounds the queue (edge-device memory); overflow eviction is
+    explicit: ``drop-oldest`` (paper §IV — stale frames are sacrificed for
+    fresh ones) pops from the head, ``drop-newest`` refuses arrivals once
+    full.  Conservation holds by construction:
+
+        total_streamed == len(buffer) + total_taken + total_dropped
+    """
+
+    def __init__(self, policy: str = PERSISTENCE,
+                 max_size: Optional[int] = None, evict: str = DROP_OLDEST):
+        if evict not in (DROP_OLDEST, DROP_NEWEST):
+            raise ValueError(f"unknown eviction policy {evict!r}; options: "
+                             f"{[DROP_OLDEST, DROP_NEWEST]}")
+        if max_size is not None and max_size < 1:
+            raise ValueError(f"max_size must be >= 1, got {max_size}")
         self.policy = policy
+        self.max_size = max_size
+        self.evict = evict
         self._q: Deque[int] = collections.deque()
         self._next_id = 0
         self.peak = 0
+        self.total_streamed = 0
+        self.total_taken = 0
         self.total_dropped = 0
+
+    def _append(self, sample_id: int) -> None:
+        """One arrival under the capacity/eviction policy."""
+        self.total_streamed += 1
+        if self.max_size is not None and len(self._q) >= self.max_size:
+            if self.evict == DROP_NEWEST:
+                self.total_dropped += 1        # arrival refused, never queued
+                return
+            self._q.popleft()                  # drop-oldest: evict the head
+            self.total_dropped += 1
+        self._q.append(sample_id)
+
+    def extend(self, ids: List[int]) -> None:
+        """Stream specific sample ids in (the sharded loader's entry point:
+        ids index the device's placed shards, not a synthetic counter)."""
+        for sid in ids:
+            self._append(int(sid))
+        self.peak = max(self.peak, len(self._q))
 
     def stream_in(self, n: int) -> None:
         for _ in range(int(n)):
-            self._q.append(self._next_id)
+            self._append(self._next_id)
             self._next_id += 1
         if self.policy == TRUNCATION and len(self._q) > n:
             drop = len(self._q) - int(n)
@@ -92,6 +134,7 @@ class SampleBuffer:
         out = []
         for _ in range(min(int(n), len(self._q))):
             out.append(self._q.popleft())
+        self.total_taken += len(out)
         return out
 
     def clear(self) -> None:

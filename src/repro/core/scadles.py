@@ -29,7 +29,8 @@ from repro.core import injection as inj_lib
 from repro.core import simclock
 from repro.core import streams as stream_lib
 from repro.core.weighted_agg import (clip_batch, linear_scaled_lr,
-                                     rate_weights, weighted_aggregate)
+                                     rate_weights, skew_corrected_rates,
+                                     weighted_aggregate)
 from repro.obs.callbacks import RoundObserver
 from repro.obs.tracker import NOOP
 
@@ -74,6 +75,20 @@ class ScaDLESConfig:
     # damp a stale gradient's aggregation weight by 1/(1+s), s = commits the
     # participant's model view is behind (async-SGD staleness compensation)
     staleness_damping: bool = True
+    # --- non-IID streaming data plane (repro.streamdata) ----------------
+    # skew-corrected aggregation: multiply each device's rate weight by its
+    # label coverage c_i = clip(1 - TV_i, skew_floor, 1), where TV_i is the
+    # divergence the data source reports via ``label_divergence()`` (zeros
+    # => exact Eqn 4a, so IID streams are untouched).  Ignored for data
+    # sources without the signal (the legacy DeviceDataSource).
+    skew_weighting: bool = False
+    skew_floor: float = 0.05
+    # non-IID-aware staleness damping: a stale gradient from a *skewed*
+    # device is doubly off-policy — old params AND a biased label mix — so
+    # scale the damping with its divergence:
+    #     w = w / (1 + s * (1 + noniid_damping * TV_i))
+    # 0.0 keeps the classic 1/(1+s) bit-exactly (fleet carry path only)
+    noniid_damping: float = 0.0
     # observability sink (repro.obs.Tracker).  None keeps the inert NOOP:
     # no per-round records, no metric assembly, no lowering for flop counts
     # — tracking is strictly read-only over host-side state, so a tracked
@@ -99,6 +114,15 @@ class ScaDLESTrainer:
             intra_jitter=cfg.intra_jitter)
         self.buffers = [buf_lib.CountingBuffer(policy=cfg.policy)
                         for _ in range(cfg.n_devices)]
+        # streamdata extensions (repro.streamdata), discovered by attribute
+        # so the legacy DeviceDataSource runs untouched — and so core never
+        # imports streamdata (that package imports core.buffer):
+        #   time_aware         -> pass t_sim into batches() (drift / diurnal)
+        #   on_arrivals(a)     -> mirror arrivals into the loader's buffers
+        #   label_divergence() -> per-device TV-to-global-mix skew signal
+        self._data_time_aware = bool(getattr(data, "time_aware", False))
+        self._on_arrivals = getattr(data, "on_arrivals", None)
+        self._div_fn = getattr(data, "label_divergence", None)
         self.params = model["init"](jax.random.PRNGKey(cfg.seed))
         self.momentum_state = jax.tree.map(jnp.zeros_like, self.params)
         actual_floats = sum(x.size for x in jax.tree.leaves(self.params))
@@ -150,6 +174,7 @@ class ScaDLESTrainer:
             self._pending_valid = np.zeros(cfg.n_devices, bool)
             self._pending_debit = np.zeros(cfg.n_devices)   # buffer samples
             self._pending_comp = np.zeros(cfg.n_devices, bool)  # use_comp
+            self._pending_div = np.zeros(cfg.n_devices)     # start-round TV
         self._step_fn, self._carry_step_fn = self._build_step()
 
     # ------------------------------------------------------------------
@@ -314,7 +339,7 @@ class ScaDLESTrainer:
         return np.stack(rows), evicted
 
     def _plan_carry_commit(self, res, batches, rates, xs, ys, masks, debited,
-                           use_comp):
+                           use_comp, div=None):
         """Assemble the step args for a relaxed-consistency commit: update
         the pending store with this round's fresh starters, look up each
         committer's read-version params in the ring, and build the
@@ -331,6 +356,11 @@ class ScaDLESTrainer:
         self._pending_valid[res.crashed] = False
         self._pending_debit[started_data] = debited[started_data]
         self._pending_comp[started_data] = use_comp
+        # divergence is pinned at *start* time like everything else pending:
+        # a drifting source may report a different mix by commit time, but
+        # the carried gradient was computed on the start-round batch
+        self._pending_div[started_data] = (div[started_data]
+                                           if div is not None else 0.0)
         # a live switch into backup-workers can cancel in-flight work a
         # relaxed policy had been carrying from an earlier round: the
         # straggler loses its gradient, not its samples — refund the debit
@@ -360,6 +390,9 @@ class ScaDLESTrainer:
         stale = np.maximum(res.staleness, 0)
         agg_base = (self._pending_rates.astype(np.float64) if cfg.weighted
                     else np.ones(cfg.n_devices))
+        if cfg.skew_weighting and self._div_fn is not None:
+            agg_base = skew_corrected_rates(agg_base, self._pending_div,
+                                            cfg.skew_floor)
         w = agg_base * part
         total = w.sum()
         if total > 0:
@@ -371,7 +404,14 @@ class ScaDLESTrainer:
             # makes every policy cycle-equivalent to synchronous SGD: steady
             # -state staleness is ~(commits per device cycle - 1), so the
             # damping exactly compensates the higher commit frequency.
-            w = w / (1.0 + stale)
+            if cfg.noniid_damping and self._div_fn is not None:
+                # non-IID-aware: the effective staleness of a skewed
+                # committer grows with its start-round divergence (see
+                # ScaDLESConfig.noniid_damping)
+                w = w / (1.0 + stale * (1.0 + cfg.noniid_damping
+                                        * self._pending_div))
+            else:
+                w = w / (1.0 + stale)
         # linear LR scaling sees the whole fleet's realised rates, not just
         # this commit's participants: the commit frequency already scales
         # with participation, and the damping handles the staleness
@@ -390,7 +430,10 @@ class ScaDLESTrainer:
             eval_fn: Optional[Callable] = None) -> List[Dict[str, float]]:
         cfg = self.cfg
         for t in range(steps):
-            rates = self.sim.rates_at(t)
+            # time-aware rate curves (diurnal / quantity, repro.streamdata)
+            # modulate the Table I draw on the sim clock; without a curve
+            # this is exactly the legacy rates_at(t)
+            rates = self.sim.rates_at(t, t_sim=self.sim_time_s)
             # which devices start fresh work this round (fleet: up and not
             # carrying an in-flight gradient; legacy lockstep: everyone)
             if self.fleet is not None:
@@ -428,8 +471,24 @@ class ScaDLESTrainer:
                 on_hand = b.size + float(arriving[i])
                 b.step(float(arriving[i]), float(batches[i]))
                 debited[i] = min(float(batches[i]), on_hand)
+            if self._on_arrivals is not None:
+                # mirror this round's arrivals into the data plane's own
+                # per-device sample buffers (sharded-loader prefetch); the
+                # CountingBuffers above remain the clock/wait accounting
+                self._on_arrivals(arriving)
             # draw fixed-shape batches with masks
-            xs, ys, masks = self.data.batches(self.rng, batches, cfg.b_max)
+            if self._data_time_aware:
+                xs, ys, masks = self.data.batches(self.rng, batches,
+                                                  cfg.b_max,
+                                                  t_sim=self.sim_time_s)
+            else:
+                xs, ys, masks = self.data.batches(self.rng, batches,
+                                                  cfg.b_max)
+            # per-device label divergence (TV to the global mix) from the
+            # data plane, if it reports one — feeds skew-corrected weights,
+            # non-IID damping, engine telemetry, and the round record
+            div = (np.asarray(self._div_fn(), np.float64)
+                   if self._div_fn is not None else None)
             inj_bytes = 0
             if cfg.injection:
                 alpha, beta = cfg.injection
@@ -464,7 +523,7 @@ class ScaDLESTrainer:
                     self._ring_push(self.fleet.version)
                 res = self.fleet.round(waits=waits_vec, batches=batches,
                                        floats_on_wire=floats_wire,
-                                       extra_bytes=inj_bytes)
+                                       extra_bytes=inj_bytes, label_div=div)
                 dt = res.dt
                 # refund for thrown-away work: a crashed device or a
                 # cancelled straggler loses its gradient, not its samples
@@ -474,7 +533,8 @@ class ScaDLESTrainer:
                         debited[i] = 0.0
                 if use_carry:
                     part, carry_args = self._plan_carry_commit(
-                        res, batches, rates, xs, ys, masks, debited, use_comp)
+                        res, batches, rates, xs, ys, masks, debited, use_comp,
+                        div)
                 else:
                     part = res.part & (batches > 0)
                     carry_args = None
@@ -516,6 +576,9 @@ class ScaDLESTrainer:
                 else:
                     agg_base = rates.astype(np.float64) if cfg.weighted \
                         else np.ones(cfg.n_devices)
+                    if cfg.skew_weighting and div is not None:
+                        agg_base = skew_corrected_rates(agg_base, div,
+                                                        cfg.skew_floor)
                     agg_w = agg_base * part
                     rates_eff = rates * part
                     step_fn = self._step_fn
@@ -556,6 +619,12 @@ class ScaDLESTrainer:
                    "gap": float(gap), "used_comp": float(use_comp),
                    "floats_wire": float(floats_wire),
                    "inj_bytes": float(inj_bytes), **fleet_rec}
+            if div is not None:
+                n_part = float(np.sum(part))
+                rec["label_div_mean"] = (float(np.sum(div * part)) / n_part
+                                         if n_part else 0.0)
+                rec["label_div_max"] = (float(np.max(div * part))
+                                        if n_part else 0.0)
             if eval_every and eval_fn and (t + 1) % eval_every == 0:
                 rec.update(eval_fn(self.params))
             # observability: assemble + emit the round record only when a

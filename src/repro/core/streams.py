@@ -12,7 +12,7 @@ matching the paper's 600 samples/s observation beyond 16 streams).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Callable, Optional
 
 import numpy as np
 
@@ -60,19 +60,37 @@ def streaming_latency(rate: np.ndarray, batch: int) -> np.ndarray:
 
 @dataclasses.dataclass
 class StreamSimulator:
-    """Per-device sample streams with optional intra-device drift."""
+    """Per-device sample streams with optional intra-device drift.
+
+    Determinism contract: all randomness (rate sampling at construction, the
+    jitter random walk) flows through one ``np.random.Generator``.  Pass an
+    explicit ``rng`` to own the stream — two simulators built from generators
+    seeded identically produce bit-identical rate traces (the sharded loader
+    and the bit-exactness tests rely on this); ``seed`` is the convenience
+    path and constructs ``default_rng(seed)``.
+
+    ``rate_curve`` composes a sim-time multiplier onto every device's rate —
+    diurnal day/night cycles, quantity-skew capacity scaling
+    (``repro.streamdata.generators``).  It receives the absolute sim time and
+    returns a scalar or per-device ``(n_devices,)`` factor; ``rates_at`` only
+    applies it when the caller supplies ``t_sim``, so step-indexed legacy
+    callers are unchanged.
+    """
     dist: StreamDist
     n_devices: int
     seed: int = 0
     intra_jitter: float = 0.0        # fraction of base rate per step (random walk)
     producer_contention: bool = False
+    rng: Optional[np.random.Generator] = None
+    rate_curve: Optional[Callable[[float], np.ndarray]] = None
 
     def __post_init__(self):
-        self._rng = np.random.default_rng(self.seed)
+        self._rng = self.rng if self.rng is not None \
+            else np.random.default_rng(self.seed)
         self.base_rates = self.dist.sample(self._rng, self.n_devices)
         self._drift = np.zeros(self.n_devices)
 
-    def rates_at(self, step: int) -> np.ndarray:
+    def rates_at(self, step: int, t_sim: Optional[float] = None) -> np.ndarray:
         r = self.base_rates.astype(np.float64)
         if self.intra_jitter > 0:
             self._drift = np.clip(
@@ -80,6 +98,9 @@ class StreamSimulator:
                     0.0, self.intra_jitter, self.n_devices),
                 -3 * self.intra_jitter, 3 * self.intra_jitter)
             r = r * (1.0 + self._drift)
+        if self.rate_curve is not None and t_sim is not None:
+            r = r * np.maximum(np.asarray(self.rate_curve(float(t_sim)),
+                                          np.float64), 0.0)
         if self.producer_contention:
             r = effective_rate(r, self.n_devices)
         return np.maximum(np.round(r), 1.0).astype(np.int64)

@@ -15,6 +15,7 @@ from typing import Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def clip_batch(rates, b_min: int, b_max: int):
@@ -43,6 +44,28 @@ def weighted_aggregate(stacked_grads, rates, normalize: bool = True):
         return jnp.tensordot(w.astype(g.dtype), g, axes=(0, 0))
 
     return jax.tree.map(comb, stacked_grads)
+
+
+def skew_corrected_rates(rates, divergence, floor: float = 0.05):
+    """Skew-corrected weighting mode (non-IID streams): effective rate
+    ``r_i * c_i`` where ``c_i = clip(1 - TV_i, floor, 1)`` is device i's
+    label coverage — its total-variation distance to the global label mix
+    (``repro.streamdata.partition``), complemented.
+
+    Rationale: Eqn 4a weights gradients by stream rate because a faster
+    stream carries more evidence; under label skew a fast *narrow* stream
+    carries a lot of evidence about very few classes, and rate-weighting
+    alone amplifies its bias.  Scaling by coverage discounts the weight in
+    proportion to how unrepresentative the device's mix is, while the floor
+    keeps even a one-class device from being silenced entirely (its classes
+    may live nowhere else).  IID devices (TV = 0) are untouched, so the
+    corrected mode degenerates to Eqn 4a exactly on IID streams.
+
+    Host-side (numpy) on purpose: weights are assembled on the host in both
+    trainer paths and must stay float64 until the final cast.
+    """
+    cov = np.clip(1.0 - np.asarray(divergence, np.float64), float(floor), 1.0)
+    return np.asarray(rates, np.float64) * cov
 
 
 def linear_scaled_lr(base_lr: float, rates, base_global_batch: float):

@@ -1,3 +1,4 @@
 from repro.data.synthetic import (  # noqa: F401
-    ClassClusterData, DeviceDataSource, TokenData, label_skew_partition,
+    ClassClusterData, DeviceDataSource, TokenData, augment_batch,
+    label_skew_partition,
 )

@@ -63,6 +63,23 @@ def label_skew_partition(num_classes: int, n_devices: int,
     return out
 
 
+def augment_batch(rng: np.random.Generator, x: np.ndarray) -> np.ndarray:
+    """Streaming-style augmentation: random horizontal flip + crop-shift.
+
+    Mutates ``x`` in place and consumes exactly two rng draws (a (n,) uniform
+    and a (n, 2) integer draw) — the streamdata sources share this function so
+    an IID streamdata-fed run replays ``DeviceDataSource``'s rng sequence
+    bit-exactly.
+    """
+    n = len(x)
+    flip = rng.random(n) < 0.5
+    x[flip] = x[flip, :, ::-1]
+    shift = rng.integers(-2, 3, size=(n, 2))
+    for i in range(n):
+        x[i] = np.roll(x[i], tuple(shift[i]), axis=(0, 1))
+    return x
+
+
 @dataclasses.dataclass
 class DeviceDataSource:
     """Per-device sampler over ClassClusterData, IID or label-skewed."""
@@ -87,11 +104,7 @@ class DeviceDataSource:
         x = self.data.train_x[idx]
         y = self.data.train_y[idx]
         if self.augment:
-            flip = rng.random(n) < 0.5
-            x[flip] = x[flip, :, ::-1]
-            shift = rng.integers(-2, 3, size=(n, 2))
-            for i in range(n):
-                x[i] = np.roll(x[i], tuple(shift[i]), axis=(0, 1))
+            augment_batch(rng, x)
         return x, y
 
     def batches(self, rng, batch_sizes: np.ndarray, b_max: int):

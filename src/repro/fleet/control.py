@@ -81,11 +81,16 @@ class HillClimbController(SyncController):
     name = "hill-climb"
 
     def __init__(self, n_devices: int, window: int = 4, tol: float = 0.05,
-                 start_k: Optional[int] = None, probe_every: int = 6):
+                 start_k: Optional[int] = None, probe_every: int = 6,
+                 skew_threshold: float = 0.35):
         self.n = max(int(n_devices), 1)
         self.window = max(int(window), 1)
         self.tol = float(tol)
         self.probe_every = max(int(probe_every), 1)
+        self.skew_threshold = float(skew_threshold)
+        # EWMA of per-commit label divergence (repro.streamdata signal via
+        # RoundTelemetry); stays 0.0 on IID streams / legacy data sources
+        self.div_ewma = 0.0
         self.ref_k = min(max(1 if start_k is None else int(start_k), 1),
                          self.n)
         # hill-climb state: prefer relaxing (smaller k) when exploring
@@ -126,6 +131,12 @@ class HillClimbController(SyncController):
         if math.isfinite(loss) and alpha > 0.0:
             self._ema = (loss if self._ema is None
                          else (1.0 - alpha) * self._ema + alpha * loss)
+        if alpha > 0.0:
+            # smoothed in gradient-time like the loss: a lone skewed async
+            # committer moves the skew estimate 1/n as much as a full barrier
+            self.div_ewma = ((1.0 - alpha) * self.div_ewma + alpha
+                             * float(getattr(telemetry, "label_divergence",
+                                             0.0)))
         if self._win_start is None:
             self._win_start = self._ema
         self._win_dt += telemetry.dt
@@ -179,9 +190,12 @@ class HillClimbController(SyncController):
             base = 0.5 * (self.ref_obj + obj)
             self.trend = 0.5 * self.trend + 0.25 * (obj - self.ref_obj)
             m = self._margin(base)
-            if self.cand_k < self.ref_k:
+            if self.cand_k < self.ref_k and not self._skewed():
                 # relaxing the barrier: accept ties — a smaller k never
-                # commits later, so on a plateau prefer the cheaper barrier
+                # commits later, so on a plateau prefer the cheaper barrier.
+                # Under heavy label skew the tie rule inverts: a relaxed
+                # commit aggregates an unrepresentative mix, so relaxing
+                # must *prove* a win, never ride a tie
                 ok = self._cand_obj >= base - m
             else:
                 ok = self._cand_obj > base + m
@@ -214,8 +228,18 @@ class HillClimbController(SyncController):
             return None                              # already the revert
         return self._action_for(self.ref_k, "revert")
 
+    def _skewed(self) -> bool:
+        """Heavy statistical heterogeneity on the committed mixes: back off
+        the relax-first bias (see ``FleetConfig.controller_skew_threshold``)."""
+        return self.div_ewma > self.skew_threshold
+
     def _propose_probe(self) -> Optional[ControlAction]:
-        for d in (self.direction, -self.direction):
+        # under heavy skew, probe the tighter barrier first: wider commits
+        # re-balance the aggregated label mix, which the objective rewards
+        # only after the relaxed run has already wandered
+        dirs = (1, -1) if self._skewed() else (self.direction,
+                                               -self.direction)
+        for d in dirs:
             k = min(max(self.ref_k + d * self.step, 1), self.n)
             if k != self.ref_k:
                 self.direction, self.cand_k, self.phase = d, k, _PROBE
@@ -244,4 +268,6 @@ def make_controller(cfg: FleetConfig, n_devices: int) -> SyncController:
                          f"options: {sorted(_CONTROLLERS)}")
     return _CONTROLLERS[cfg.controller](
         n_devices, window=cfg.controller_window, tol=cfg.controller_tol,
-        start_k=cfg.controller_start_k, probe_every=cfg.controller_probe_every)
+        start_k=cfg.controller_start_k,
+        probe_every=cfg.controller_probe_every,
+        skew_threshold=cfg.controller_skew_threshold)

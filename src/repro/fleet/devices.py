@@ -161,6 +161,13 @@ class FleetConfig:
     controller_tol: float = 0.05      # relative gain needed to accept a move
     controller_start_k: Optional[int] = None   # initial semi-sync k (None: 1)
     controller_probe_every: int = 6   # settled windows between re-probes
+    # statistical heterogeneity: when the EWMA of per-commit label divergence
+    # (repro.streamdata) exceeds this, the controller flips its exploration
+    # bias — probe *tighter* barriers first and stop accepting relax-ties —
+    # because relaxed commits aggregate an unrepresentative label mix.
+    # Divergence is in [0, 1); 0.35 ~ "committed mixes share barely half
+    # their mass with the global mix".  Ignored without a data-plane signal.
+    controller_skew_threshold: float = 0.35
     # comm-bytes source: None keeps the analytic ring formula (bit-exact with
     # the legacy EdgeClock under homogeneous full-sync); any object exposing
     # ``bytes_for(floats_on_wire) -> bytes`` overrides it — repro.dist.

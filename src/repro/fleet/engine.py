@@ -90,6 +90,8 @@ class RoundTelemetry:
     committed_wait: float      # realised max wait among committed starters
     mean_staleness: float      # over this commit's participants
     max_staleness: int
+    label_divergence: float = 0.0   # mean TV-to-global-mix over participants
+    #                                 (0.0 when the data plane reports none)
 
 
 @dataclasses.dataclass
@@ -269,6 +271,10 @@ class FleetEngine:
                                     / max(dt, 1e-12)),
             "mean_staleness": float(np.mean(stale)) if stale else 0.0,
             "max_staleness": float(max(t.max_staleness for t in win)),
+            "mean_label_divergence": (
+                float(np.mean([t.label_divergence for t in win
+                               if t.n_participants]))
+                if any(t.n_participants for t in win) else 0.0),
         }
 
     def next_policy(self) -> SyncPolicy:
@@ -295,7 +301,8 @@ class FleetEngine:
 
     # -- the round --------------------------------------------------------
     def round(self, *, waits: np.ndarray, batches: np.ndarray,
-              floats_on_wire: float, extra_bytes: float = 0.0) -> RoundResult:
+              floats_on_wire: float, extra_bytes: float = 0.0,
+              label_div: Optional[np.ndarray] = None) -> RoundResult:
         # round boundary: queued policy/knob changes take effect now, so
         # this round plans (and in-flight work commits) under one policy
         self._apply_pending()
@@ -380,6 +387,13 @@ class FleetEngine:
             self.total_staleness += int(s_vals.sum())
             self.max_staleness = max(self.max_staleness, int(s_vals.max()))
             mean_stale = float(s_vals.mean())
+        # statistical-heterogeneity signal: mean divergence over *this
+        # commit's* participants — under partial-participation policies the
+        # committed mix can be far more skewed than the fleet average
+        mean_div = 0.0
+        if label_div is not None and plan.participants:
+            mean_div = float(np.asarray(label_div, np.float64)
+                             [plan.participants].mean())
         tel = RoundTelemetry(
             round_index=self.rounds - 1, policy=self.policy.name,
             knobs=self.policy.knobs(), dt=commit - T0, commit_time=commit,
@@ -388,7 +402,8 @@ class FleetEngine:
             n_crashed=len(crashed),
             committed_samples=float(self._work_batch[plan.participants].sum()),
             committed_wait=max_wait, mean_staleness=mean_stale,
-            max_staleness=int(commit_stale[plan.participants].max(initial=0)))
+            max_staleness=int(commit_stale[plan.participants].max(initial=0)),
+            label_divergence=mean_div)
         self.telemetry.append(tel)
         self.policy.observe(tel)
         if self.tracker.active:

@@ -123,6 +123,7 @@ def fleet_round_record(tel) -> Dict[str, float]:
         "committed_wait_s": tel.committed_wait,
         "mean_staleness": tel.mean_staleness,
         "max_staleness": tel.max_staleness,
+        "label_divergence": getattr(tel, "label_divergence", 0.0),
         **{f"knob_{k}": float(v) for k, v in tel.knobs.items()},
     }
 
