@@ -91,6 +91,32 @@ TOLERANCES = {
     "serve_cont_ttft_p95_s": dict(
         tol_frac=0.10, direction="lower",
         note="continuous batching TTFT p95 (sim s)"),
+    "serve_sched_chunked_goodput_tok_s": dict(
+        tol_frac=0.05, direction="higher",
+        note="chunked-interleaved scheduler (chunk=64, decode_first) "
+             "deadline-met tok/s on the S2 mixed-length trace "
+             "(deterministic sim)"),
+    "serve_sched_chunk_win_x": dict(
+        tol_frac=0.03, direction="higher",
+        note="chunked goodput / PR-5 whole-prompt goodput on the same "
+             "trace: > 1 pins the chunked-interleaved win"),
+    "serve_sched_ttft_win_x": dict(
+        tol_frac=0.02, direction="higher",
+        note="whole-prompt TTFT p95 / chunked TTFT p95: > 1 pins the "
+             "short-prompt overtaking win"),
+    "serve_sched_scaleup_x": dict(
+        tol_frac=0.05, direction="higher",
+        note="4-runner / 1-runner goodput on the bursty aggregate trace: "
+             "multi-runner fan-out must keep scaling"),
+    "serve_ctrl_goodput_tok_s": dict(
+        tol_frac=0.05, direction="higher",
+        note="ServeController closed-loop goodput on the bursty trace, "
+             "starting from whole-prompt defaults (deterministic sim)"),
+    "serve_ctrl_vs_static_frac": dict(
+        tol_frac=0.05, direction="higher",
+        note="controller goodput / best static (chunk, priority, replicas) "
+             "grid point: near 1 means the climb finds the grid optimum "
+             "unprompted, > 1 means it beats every static setting"),
     "noniid_strict_advantage_x": dict(
         tol_frac=0.05, direction="higher",
         note="capped async/semi-sync time-to-global-eval-target ratio at "
@@ -208,6 +234,57 @@ def collect_serving():
     }
 
 
+def collect_serving_scale():
+    """Chunked-interleaved vs whole-prompt, multi-runner scaling, and the
+    controller closed loop (all pure sim on the synthetic cost model)."""
+    from repro.serve import (BurstyRequestStream, ContinuousBatchingServer,
+                             PRIORITIES, RequestStream, Scheduler,
+                             ServeController, StepCostModel)
+
+    cost = StepCostModel(decode_step_s=0.01, prefill_token_s=5e-4,
+                         prefill_base_s=2e-3)
+    # S2 near-overload with mixed prompt lengths: the regime where chunked
+    # prefill lets short prompts overtake long ones mid-prefill
+    reqs = RequestStream(dist="S2", n_clients=12, prompt_lens=(16, 64, 256),
+                         max_new_tokens=16, slo_ttft_s=0.25, slo_tpot_s=0.05,
+                         seed=GATE_SEED).generate(8.0)
+    _, whole = ContinuousBatchingServer(4, cost).run(reqs, horizon_s=8.0)
+    _, chunked = Scheduler(4, cost, chunk_tokens=64,
+                           priority="decode_first").run(reqs, horizon_s=8.0)
+    assert chunked["conservation_ok"], "scheduler lost a request"
+
+    # bursty aggregate trace: multi-runner scaling + the closed loop vs the
+    # best static (chunk, priority, replicas) grid point
+    breqs = BurstyRequestStream(base_rate=30.0, burst_mult=4.0,
+                                prompt_lens=(16, 64, 256), max_new_tokens=16,
+                                slo_ttft_s=0.25, slo_tpot_s=0.05,
+                                seed=1).generate(8.0)
+    grid = {}
+    for c in (None, 32, 64, 128):
+        for p in PRIORITIES:
+            for n in (1, 2, 4):
+                _, s = Scheduler(4, cost, n_runners=n, chunk_tokens=c,
+                                 priority=p).run(breqs, horizon_s=8.0)
+                grid[(c, p, n)] = s["goodput_tok_s"]
+    best_static = max(grid.values())
+    ctrl = ServeController()
+    _, cs = Scheduler(4, cost, n_runners=4).run(
+        breqs, horizon_s=8.0, controller=ctrl,
+        control_every_s=1.0, window_s=1.0)
+    assert cs["conservation_ok"], "controller run lost a request"
+    return {
+        "serve_sched_chunked_goodput_tok_s": chunked["goodput_tok_s"],
+        "serve_sched_chunk_win_x": (chunked["goodput_tok_s"]
+                                    / whole["goodput_tok_s"]),
+        "serve_sched_ttft_win_x": (whole["ttft_p95_s"]
+                                   / chunked["ttft_p95_s"]),
+        "serve_sched_scaleup_x": (grid[(32, "prefill_first", 4)]
+                                  / grid[(32, "prefill_first", 1)]),
+        "serve_ctrl_goodput_tok_s": cs["goodput_tok_s"],
+        "serve_ctrl_vs_static_frac": cs["goodput_tok_s"] / best_static,
+    }
+
+
 def collect_prefill(profile_dir=None, prompt_len=64, reps=3):
     """Fused vs loop prefill on the reduced arch (real wall-clock)."""
     import jax
@@ -271,6 +348,7 @@ def collect(profile_dir=None):
     for name, fn in (("training", lambda: collect_training(profile_dir)),
                      ("noniid", collect_noniid),
                      ("serving", collect_serving),
+                     ("serving_scale", collect_serving_scale),
                      ("prefill", lambda: collect_prefill(profile_dir))):
         t0 = time.perf_counter()
         metrics.update(fn())

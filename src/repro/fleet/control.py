@@ -47,6 +47,132 @@ _CONFIRM = "confirm"  # re-measuring the reference to bracket the probe
 _SETTLE = "settle"  # tracking the reference, re-probing periodically
 
 
+class ClimbCore:
+    """Reusable windowed hill climb over one bounded integer axis.
+
+    The domain-independent phase machine under :class:`HillClimbController`
+    (and the serving-side ``ServeController``): probe a neighbouring value,
+    bracket ambiguous probes with a confirm window to cancel linear
+    objective drift, accept with doubling steps, revert with a direction
+    flip, and re-probe periodically from the settled reference.  Values are
+    integers in ``[lo, hi]``; ``relax_dir`` marks the direction whose end is
+    *cheaper to run* (ties there may be accepted — hook ``tie_relax``).
+
+    :meth:`observe` is fed one windowed objective (higher is better) per
+    call and returns ``(value_to_run_next, reason)`` when the configuration
+    should change (reason in ``probe|confirm|accept|revert``) or None.
+    Callers must invoke :meth:`note_scale` with every windowed objective —
+    including warm-up windows never fed to ``observe`` — so the noise floor
+    tracks the objective's true scale.
+    """
+
+    def __init__(self, lo: int, hi: int, start: int, tol: float = 0.05,
+                 probe_every: int = 6, relax_dir: int = -1,
+                 tie_relax=None, probe_dirs=None):
+        self.lo, self.hi = int(lo), int(hi)
+        self.tol = float(tol)
+        self.probe_every = max(int(probe_every), 1)
+        self.relax_dir = 1 if relax_dir >= 0 else -1
+        self.ref = min(max(int(start), self.lo), self.hi)
+        self.cand: Optional[int] = None
+        self.direction = self.relax_dir      # prefer relaxing when exploring
+        self.step = 1
+        self.phase = _REF
+        self.settled = 0
+        self.ref_obj: Optional[float] = None
+        self.max_obj = 0.0   # largest |objective| seen: noise floor scale
+        self.trend = 0.0     # per-window drift of the reference objective
+        self._cand_obj = 0.0
+        self._tie_relax = tie_relax if tie_relax is not None \
+            else (lambda: True)
+        self._probe_dirs = probe_dirs if probe_dirs is not None \
+            else (lambda: (self.direction, -self.direction))
+
+    def note_scale(self, obj: float) -> None:
+        self.max_obj = max(self.max_obj, abs(obj))
+
+    def _relaxing(self, cand: int) -> bool:
+        return (cand - self.ref) * self.relax_dir > 0
+
+    def _margin(self, scale: float) -> float:
+        # once the objective collapses toward 0 a purely relative tolerance
+        # would let sign-noise drive the climb; the floor (tol x the largest
+        # |objective| ever seen) keeps moves that don't clear real signal
+        # from being accepted
+        return self.tol * abs(scale) + self.tol * self.max_obj
+
+    def observe(self, obj: float):
+        if self.phase == _REF:
+            self.ref_obj = obj
+            return self.propose_probe()
+        if self.phase == _PROBE:
+            m = self._margin(self.ref_obj)
+            if self._relaxing(self.cand) and obj >= self.ref_obj + m:
+                # relaxing and clearly winning even against the raw (drift-
+                # uncorrected) reference: accept without a confirm window
+                return self._accept_move(obj)
+            if not self._relaxing(self.cand) and self.trend >= 0.0 \
+                    and obj < self.ref_obj - m:
+                # tightening and clearly losing while the objective is not
+                # decaying (decay would deflate a late-measured probe):
+                # reject without a confirm window
+                return self._reject_move()
+            # ambiguous: bracket the probe with a second reference window —
+            # comparing the candidate against the *mean* of the two
+            # surrounding reference windows cancels linear objective drift
+            self._cand_obj = obj
+            self.phase = _CONFIRM
+            return (self.ref, "confirm")
+        if self.phase == _CONFIRM:
+            base = 0.5 * (self.ref_obj + obj)
+            self.trend = 0.5 * self.trend + 0.25 * (obj - self.ref_obj)
+            m = self._margin(base)
+            if self._relaxing(self.cand) and self._tie_relax():
+                # relaxing: accept ties — the relaxed end is cheaper to run,
+                # so on a plateau prefer it.  The hook lets a domain revoke
+                # the tie rule (e.g. under heavy label skew)
+                ok = self._cand_obj >= base - m
+            else:
+                ok = self._cand_obj > base + m
+            self.ref_obj = obj
+            if ok:
+                return self._accept_move(self._cand_obj)
+            return self._reject_move(already_at_ref=True)
+        # _SETTLE: keep the reference objective (and its drift) fresh — a
+        # stale reference would mis-score every probe against the
+        # objective's own trajectory
+        self.trend = 0.5 * self.trend + 0.5 * (obj - self.ref_obj)
+        self.ref_obj = obj
+        self.settled += 1
+        if self.settled >= self.probe_every:
+            return self.propose_probe()
+        return None
+
+    def _accept_move(self, cand_obj: float):
+        self.ref, self.ref_obj = self.cand, cand_obj
+        self.step *= 2                           # accelerate while winning
+        # one settle window at the new reference, then probe onward
+        self.phase, self.settled = _SETTLE, self.probe_every - 1
+        return (self.ref, "accept")
+
+    def _reject_move(self, already_at_ref: bool = False):
+        self.phase, self.settled = _SETTLE, 0
+        self.step = 1
+        self.direction = -self.direction
+        if already_at_ref:                       # the confirm window was
+            return None                          # already the revert
+        return (self.ref, "revert")
+
+    def propose_probe(self):
+        for d in self._probe_dirs():
+            v = min(max(self.ref + d * self.step, self.lo), self.hi)
+            if v != self.ref:
+                self.direction, self.cand, self.phase = d, v, _PROBE
+                return (v, "probe")
+        self.phase, self.settled = _SETTLE, 0    # degenerate axis
+        return None
+
+
 @dataclasses.dataclass(frozen=True)
 class ControlAction:
     """A controller decision, applied via the engine's deferred path:
@@ -76,7 +202,14 @@ class SyncController:
 
 
 class HillClimbController(SyncController):
-    """ADSP-style windowed hill climb over the semi-sync barrier size."""
+    """ADSP-style windowed hill climb over the semi-sync barrier size.
+
+    The phase machine lives in :class:`ClimbCore` (one axis, ``k`` in
+    ``[1, n]``, relaxed end = smaller k); this class owns the fleet-domain
+    pieces — the gradient-time windowing of the loss objective, the label-
+    skew EWMA that flips the probe order and revokes the relax-tie rule,
+    and the mapping from barrier size to policy family.
+    """
 
     name = "hill-climb"
 
@@ -91,18 +224,16 @@ class HillClimbController(SyncController):
         # EWMA of per-commit label divergence (repro.streamdata signal via
         # RoundTelemetry); stays 0.0 on IID streams / legacy data sources
         self.div_ewma = 0.0
-        self.ref_k = min(max(1 if start_k is None else int(start_k), 1),
-                         self.n)
-        # hill-climb state: prefer relaxing (smaller k) when exploring
-        self.cand_k: Optional[int] = None
-        self.direction = -1
-        self.step = 1
-        self.phase = _REF
-        self.settled = 0
-        self.ref_obj: Optional[float] = None
-        self.max_obj = 0.0       # largest |objective| seen: noise floor scale
-        self.trend = 0.0         # per-window drift of the reference objective
-        self._cand_obj = 0.0     # probe window's objective, pending confirm
+        self.core = ClimbCore(
+            1, self.n, 1 if start_k is None else int(start_k),
+            tol=self.tol, probe_every=self.probe_every, relax_dir=-1,
+            # under heavy label skew a relaxed commit aggregates an
+            # unrepresentative mix: relaxing must prove a win, never ride
+            # a tie, and probes try the tighter barrier first
+            tie_relax=lambda: not self._skewed(),
+            probe_dirs=lambda: ((1, -1) if self._skewed()
+                                else (self.core.direction,
+                                      -self.core.direction)))
         self.actions: List[ControlAction] = []       # decision log
         # window accumulators (EWMA-smoothed loss, sim seconds); the first
         # window only warms the EWMA up — its objective is transient-skewed.
@@ -146,87 +277,32 @@ class HillClimbController(SyncController):
         # window boundary: loss progress per simulated second
         obj = (self._win_start - self._ema) / max(self._win_dt, 1e-12)
         self._win_grads, self._win_dt, self._win_start = 0, 0.0, self._ema
-        self.max_obj = max(self.max_obj, abs(obj))
+        self.core.note_scale(obj)
         if self._warm:
             self._warm = False
             return None
-        act = self._decide(obj)
+        move = self.core.observe(obj)
+        act = None if move is None else self._action_for(*move)
         if act is not None:
             self.actions.append(act)
         return act
 
-    # -- the climb --------------------------------------------------------
-    def _margin(self, scale: float) -> float:
-        # once training plateaus the objective collapses toward 0 and a
-        # purely relative tolerance would let sign-noise drive the climb;
-        # the floor (tol x the largest |objective| ever seen) keeps moves
-        # that don't clear real, training-scale signal from being accepted
-        return self.tol * abs(scale) + self.tol * self.max_obj
+    # -- the climb (delegated to ClimbCore) -------------------------------
+    @property
+    def ref_k(self) -> int:
+        return self.core.ref
 
-    def _decide(self, obj: float) -> Optional[ControlAction]:
-        if self.phase == _REF:
-            self.ref_obj = obj
-            return self._propose_probe()
-        if self.phase == _PROBE:
-            m = self._margin(self.ref_obj)
-            if self.cand_k < self.ref_k and obj >= self.ref_obj + m:
-                # relaxing and clearly winning even against the raw (drift-
-                # uncorrected) reference: accept without a confirm window
-                return self._accept_move(obj)
-            if self.cand_k > self.ref_k and self.trend >= 0.0 \
-                    and obj < self.ref_obj - m:
-                # tightening and clearly losing while the training curve is
-                # not decaying (decay would deflate a late-measured probe):
-                # reject without a confirm window
-                return self._reject_move()
-            # ambiguous: bracket the probe with a second reference window —
-            # comparing the candidate against the *mean* of the two
-            # surrounding reference windows cancels linear objective drift
-            # (the early-training ramp, the convergence decay)
-            self._cand_obj = obj
-            self.phase = _CONFIRM
-            return self._action_for(self.ref_k, "confirm")
-        if self.phase == _CONFIRM:
-            base = 0.5 * (self.ref_obj + obj)
-            self.trend = 0.5 * self.trend + 0.25 * (obj - self.ref_obj)
-            m = self._margin(base)
-            if self.cand_k < self.ref_k and not self._skewed():
-                # relaxing the barrier: accept ties — a smaller k never
-                # commits later, so on a plateau prefer the cheaper barrier.
-                # Under heavy label skew the tie rule inverts: a relaxed
-                # commit aggregates an unrepresentative mix, so relaxing
-                # must *prove* a win, never ride a tie
-                ok = self._cand_obj >= base - m
-            else:
-                ok = self._cand_obj > base + m
-            self.ref_obj = obj
-            if ok:
-                return self._accept_move(self._cand_obj)
-            return self._reject_move(already_at_ref=True)
-        # _SETTLE: keep the reference objective (and its drift) fresh — loss
-        # progress rises early and decays toward convergence, and a stale
-        # reference would mis-score every probe against the training curve
-        self.trend = 0.5 * self.trend + 0.5 * (obj - self.ref_obj)
-        self.ref_obj = obj
-        self.settled += 1
-        if self.settled >= self.probe_every:
-            return self._propose_probe()
-        return None
+    @property
+    def cand_k(self) -> Optional[int]:
+        return self.core.cand
 
-    def _accept_move(self, cand_obj: float) -> ControlAction:
-        self.ref_k, self.ref_obj = self.cand_k, cand_obj
-        self.step *= 2                               # accelerate while winning
-        # one settle window at the new reference, then probe onward
-        self.phase, self.settled = _SETTLE, self.probe_every - 1
-        return self._action_for(self.ref_k, "accept")
+    @property
+    def phase(self) -> str:
+        return self.core.phase
 
-    def _reject_move(self, already_at_ref: bool = False):
-        self.phase, self.settled = _SETTLE, 0
-        self.step = 1
-        self.direction = -self.direction
-        if already_at_ref:                           # the confirm window was
-            return None                              # already the revert
-        return self._action_for(self.ref_k, "revert")
+    @property
+    def max_obj(self) -> float:
+        return self.core.max_obj
 
     def _skewed(self) -> bool:
         """Heavy statistical heterogeneity on the committed mixes: back off
@@ -234,18 +310,8 @@ class HillClimbController(SyncController):
         return self.div_ewma > self.skew_threshold
 
     def _propose_probe(self) -> Optional[ControlAction]:
-        # under heavy skew, probe the tighter barrier first: wider commits
-        # re-balance the aggregated label mix, which the objective rewards
-        # only after the relaxed run has already wandered
-        dirs = (1, -1) if self._skewed() else (self.direction,
-                                               -self.direction)
-        for d in dirs:
-            k = min(max(self.ref_k + d * self.step, 1), self.n)
-            if k != self.ref_k:
-                self.direction, self.cand_k, self.phase = d, k, _PROBE
-                return self._action_for(k, "probe")
-        self.phase, self.settled = _SETTLE, 0        # n == 1: nothing to tune
-        return None
+        move = self.core.propose_probe()
+        return None if move is None else self._action_for(*move)
 
     def _action_for(self, k: int, reason: str) -> ControlAction:
         """Map a barrier size to its policy family: the spectrum's edges

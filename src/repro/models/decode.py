@@ -22,6 +22,29 @@ Two batch disciplines share every kernel (DESIGN.md §11):
   request's cache in one fused chunked forward pass (``forward_hidden``-style
   blocks + cache writes) instead of the token-by-token loop.
 
+Two continuous-batching cache layouts share the same decode step
+(DESIGN.md §14):
+
+* **fixed-slot** (``init_slot_cache``) — every slot owns a dense
+  ``(max_batch, S, kv, hd)`` row per attention layer: memory is pinned at
+  ``max_batch x cache_len`` whether slots are occupied or not;
+* **paged** (``init_paged_cache``) — attention K/V live in per-layer page
+  *pools* ``(num_pages + max_batch, page, kv, hd)`` behind a per-slot block
+  table: a slot only holds pages for the tokens it actually has, so
+  ``max_batch`` and ``cache_len`` decouple and a host-side :class:`PagePool`
+  allocates pages per active request (JetStream/vLLM-style).  Decode gathers
+  each slot's pages into the same contiguous view the fixed-slot path reads,
+  so the two layouts are bit-exact at identical occupancy
+  (tests/test_serve_scale.py).  Recurrent / xLSTM state is O(1) per slot and
+  stays slot-resident in both layouts.
+
+``ChunkedPrefill`` splits the fused prefill into interleavable pieces: the
+scheduler issues ``chunk_tokens``-sized chunks between decode steps (each
+chunk attends against the K/V accumulated so far and carries recurrent
+state), so one long prompt no longer stalls every decoding slot for its full
+prefill cost.  ``finish`` folds the accumulated state into the same batch-1
+cache ``prefill_cache`` would have produced.
+
 Per-row independence: every op in the decode step (row-wise matmuls, per-slot
 cache scatter, per-slot kv-len masking, elementwise recurrences) treats batch
 rows independently, so a request decoded inside a mixed-age batch reproduces
@@ -33,7 +56,9 @@ works for any head count; softmax statistics reduce across shards via GSPMD
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Sequence, Tuple
+import math
+from collections import deque
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -138,14 +163,22 @@ def init_slot_cache(cfg: ModelConfig, max_batch: int, cache_len: int,
     return cache
 
 
-def slot_insert(cache, slot, src, src_slot: int = 0):
+def slot_insert(cache, slot, src, src_slot: int = 0, pages=None):
     """Copy one request's state out of ``src`` into ``cache`` slot ``slot``.
 
     ``src`` is a cache of the same config/cache_len — typically the batch-1
     output of ``prefill_cache``.  Every per-slot leaf is overwritten, so the
     slot's previous occupant needs no cleanup.  ``slot`` may be a traced
     index (jit-friendly insert).
+
+    Thin adapter over both cache layouts: a paged ``cache`` (see
+    ``init_paged_cache``) routes to :func:`paged_insert`, which additionally
+    needs the slot's ``pages`` (host ints from a :class:`PagePool`).
     """
+    if _is_paged(cache):
+        if pages is None:
+            raise ValueError("paged cache: slot_insert needs `pages`")
+        return paged_insert(cache, slot, src, pages, src_slot)
     out = dict(cache)
     out["unit"] = jax.tree.map(
         lambda dst, s: dst.at[:, slot].set(s[:, src_slot]),
@@ -165,10 +198,261 @@ def slot_evict(cache, slot):
     ignored): zeroed attention caches are masked by the slot's kv_len and
     zeroed recurrent states stay finite, so the step needs no special-casing
     — and ``slot_insert`` overwrites everything on reuse anyway.
+
+    Thin adapter: a paged cache routes to :func:`paged_evict` (the caller
+    returns the slot's pages to its :class:`PagePool`).
     """
+    if _is_paged(cache):
+        return paged_evict(cache, slot)
     out = dict(cache)
     out["unit"] = jax.tree.map(lambda a: a.at[:, slot].set(0), cache["unit"])
     out["rest"] = jax.tree.map(lambda a: a.at[slot].set(0), cache["rest"])
+    out["pos"] = cache["pos"].at[slot].set(0)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# paged / blockwise KV cache
+
+
+def _is_paged(cache) -> bool:
+    """A paged cache carries a block table ("bt") in its attention layers."""
+    for part in ("unit", "rest"):
+        for cl in cache.get(part, {}).values():
+            if "bt" in cl:
+                return True
+            if "k" in cl:           # attention layer without a table: fixed
+                return False
+    return False
+
+
+def _layer_page_geometry(S: int, page_size: int) -> Tuple[int, int]:
+    """(page tokens, columns) for a layer of logical length ``S``.
+
+    Pages must tile the layer exactly (the gathered view is reshaped back to
+    ``S``); a layer whose ring is shorter than — or not divisible by — the
+    requested page size falls back to the largest divisor, so SWA rings and
+    odd windows stay correct at the cost of smaller pages for that layer.
+    """
+    pg = page_size if S % page_size == 0 else math.gcd(S, page_size)
+    return pg, S // pg
+
+
+def _attn_layer_lens(cfg: ModelConfig, cache_len: int,
+                     pattern: Optional[Sequence[str]] = None) -> List[int]:
+    """Logical cache length of every attention layer (full: S, SWA: ring W)."""
+    pattern = tuple(pattern) if pattern is not None else cfg.pattern
+    lens = []
+    for li in range(cfg.num_layers):
+        kind, window = _effective(cfg, pattern, li)
+        if kind in (ATTN_FULL, ATTN_SWA, ATTN_LOCAL):
+            lens.append(cache_len if kind == ATTN_FULL
+                        else min(window, cache_len))
+    return lens
+
+
+def pages_needed(cfg: ModelConfig, cache_len: int, page_size: int,
+                 n_tokens: int,
+                 pattern: Optional[Sequence[str]] = None) -> int:
+    """Pages a request holding ``n_tokens`` (prompt + all generated) needs.
+
+    The per-slot page list is shared across layers (each layer reads its own
+    prefix of the list against its own pool), so the allocation is the max
+    column count over the attention layers.  Returns 0 for cache-free stacks
+    (pure recurrent/xLSTM state is slot-resident, not paged).
+    """
+    need = 0
+    for S in _attn_layer_lens(cfg, cache_len, pattern):
+        pg, _ = _layer_page_geometry(S, page_size)
+        need = max(need, -(-min(n_tokens, S) // pg))
+    return need
+
+
+class PagePool:
+    """Host-side page allocator for :func:`init_paged_cache` caches.
+
+    Pure bookkeeping: page ids index rows of every layer's pool array.  The
+    scheduler allocates a request's pages at admission (``pages_needed`` for
+    prompt + max_new_tokens, so the jitted decode step never allocates) and
+    frees them when the request finishes or is evicted.
+    """
+
+    def __init__(self, num_pages: int):
+        self.num_pages = int(num_pages)
+        self._free = deque(range(self.num_pages))
+        self._free_set = set(self._free)
+
+    @property
+    def available(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """``n`` page ids, or None when the pool cannot satisfy the request
+        (the caller queues the admission instead of over-subscribing)."""
+        if n > len(self._free):
+            return None
+        pages = [self._free.popleft() for _ in range(n)]
+        self._free_set.difference_update(pages)
+        return pages
+
+    def free(self, pages: Sequence[int]) -> None:
+        for p in pages:
+            if p in self._free_set:
+                raise ValueError(f"double free of page {p}")
+            if not 0 <= p < self.num_pages:
+                raise ValueError(f"page {p} outside pool")
+            self._free.append(p)
+            self._free_set.add(p)
+
+
+def init_paged_cache(cfg: ModelConfig, max_batch: int, cache_len: int,
+                     ctx: RunCtx, *, page_size: int, num_pages: int,
+                     pattern: Optional[Sequence[str]] = None):
+    """Paged continuous-batching cache: block-table indirection per slot.
+
+    Layout differences vs :func:`init_slot_cache`:
+
+    * attention ``k``/``v`` leaves become page *pools* of shape
+      ``(num_pages + max_batch, page, kv, hd)`` — the trailing ``max_batch``
+      rows are per-slot scratch pages that absorb the writes of freed slots
+      riding the batched step (their reads are kv_len-masked anyway);
+    * each attention layer carries a block table ``bt`` of shape
+      ``(max_batch, S_layer // page)`` int32 mapping the layer's logical
+      pages to pool rows, initialised to every slot's scratch page;
+    * recurrent / xLSTM / cross-attention leaves stay slot-resident —
+      they are O(1) (or encoder-fixed) per slot and gain nothing from paging.
+
+    Claim slots with :func:`paged_insert` (pages come from a host-side
+    :class:`PagePool`) and release them with :func:`paged_evict`.
+    """
+    cache = init_cache(cfg, max_batch, cache_len, ctx, pattern=pattern)
+    cache["pos"] = jnp.zeros((max_batch,), jnp.int32)
+    scratch = jnp.arange(num_pages, num_pages + max_batch, dtype=jnp.int32)
+
+    def page_layer(cl, reps: int = 0):
+        # reps > 0: stacked unit layer (leading reps dim on every leaf; the
+        # scan body sees one rep's slice, so pool/bt are replicated per rep)
+        if "k" not in cl:
+            return cl
+        cl = dict(cl)
+        S, kv, hd = cl["k"].shape[-3:]
+        pg, ncols = _layer_page_geometry(S, page_size)
+        pool = (num_pages + max_batch, pg, kv, hd)
+        bt = jnp.broadcast_to(scratch[:, None], (max_batch, ncols))
+        if reps:
+            pool = (reps,) + pool
+            bt = jnp.broadcast_to(bt, (reps, max_batch, ncols))
+        cl["k"] = jnp.zeros(pool, cl["k"].dtype)
+        cl["v"] = jnp.zeros(pool, cl["v"].dtype)
+        cl["bt"] = bt.astype(jnp.int32)
+        return cl
+
+    for j, cl in cache["unit"].items():
+        if "k" in cl:
+            cache["unit"][j] = page_layer(cl, reps=cl["k"].shape[0])
+    for i, cl in cache["rest"].items():
+        cache["rest"][i] = page_layer(cl)
+    return cache
+
+
+def _scratch_base(pool_rows: int, max_batch: int) -> int:
+    return pool_rows - max_batch
+
+
+def paged_insert(cache, slot: int, src, pages: Sequence[int],
+                 src_slot: int = 0):
+    """Copy one request out of a batch-1 fixed-layout ``src`` (the output of
+    ``prefill_cache`` / ``ChunkedPrefill.finish``) into the paged ``cache``.
+
+    ``pages`` (host ints from :class:`PagePool`) must cover every page the
+    request will ever touch — ``pages_needed(cfg, cache_len, page_size,
+    prompt_len + max_new_tokens)`` — since decode writes ride the block
+    table; layers take their own prefix of the list, unassigned columns fall
+    back to the slot's scratch page.
+    """
+    max_batch = cache["pos"].shape[0]
+    out = {"unit": {}, "rest": {}}
+
+    def insert_layer(dst, s, stacked: bool):
+        dst = dict(dst)
+        if "bt" in dst:
+            bt = dst["bt"]
+            ncols = bt.shape[-1]
+            pgtok = dst["k"].shape[-3]
+            rows = dst["k"].shape[-4] if not stacked else dst["k"].shape[1]
+            scr = _scratch_base(rows, max_batch) + slot
+            row = [int(p) for p in pages[:ncols]]
+            row += [scr] * (ncols - len(row))
+            row = jnp.asarray(row, jnp.int32)
+            S = ncols * pgtok
+            for name in ("k", "v"):
+                sl = s[name]
+                # (…, 1(b), S_src, kv, hd) -> page chunks at the table rows
+                sl = jnp.moveaxis(sl, -4, 0)[src_slot]    # drop batch axis
+                pad = S - sl.shape[-3]
+                if pad:
+                    width = [(0, 0)] * sl.ndim
+                    width[-3] = (0, pad)
+                    sl = jnp.pad(sl, width)
+                chunks = sl.reshape(sl.shape[:-3]
+                                    + (ncols, pgtok) + sl.shape[-2:])
+                if stacked:
+                    dst[name] = dst[name].at[:, row].set(chunks)
+                else:
+                    dst[name] = dst[name].at[row].set(chunks)
+            dst["bt"] = (bt.at[:, slot].set(row) if stacked
+                         else bt.at[slot].set(row))
+            others = {k: v for k, v in dst.items()
+                      if k not in ("k", "v", "bt")}
+        else:
+            others = dict(dst)
+        for k in others:
+            if stacked:
+                dst[k] = dst[k].at[:, slot].set(s[k][:, src_slot])
+            else:
+                dst[k] = dst[k].at[slot].set(s[k][src_slot])
+        return dst
+
+    for j, cl in cache["unit"].items():
+        out["unit"][j] = insert_layer(cl, src["unit"][j], stacked=True)
+    for i, cl in cache["rest"].items():
+        out["rest"][i] = insert_layer(cl, src["rest"][i], stacked=False)
+    src_pos = jnp.reshape(src["pos"], (-1,))[src_slot]
+    out["pos"] = cache["pos"].at[slot].set(src_pos.astype(cache["pos"].dtype))
+    return out
+
+
+def paged_evict(cache, slot: int):
+    """Release ``slot``: reset its block-table rows to the slot's scratch
+    page and zero its slot-resident state.  The data pages themselves need no
+    cleanup — reads are kv_len-masked and ``paged_insert`` overwrites whole
+    pages on reuse; return them to the :class:`PagePool` host-side."""
+    max_batch = cache["pos"].shape[0]
+    out = {"unit": {}, "rest": {}}
+
+    def evict_layer(dst, stacked: bool):
+        dst = dict(dst)
+        if "bt" in dst:
+            rows = dst["k"].shape[1] if stacked else dst["k"].shape[0]
+            scr = _scratch_base(rows, max_batch) + slot
+            if stacked:
+                dst["bt"] = dst["bt"].at[:, slot].set(scr)
+            else:
+                dst["bt"] = dst["bt"].at[slot].set(scr)
+            others = [k for k in dst if k not in ("k", "v", "bt")]
+        else:
+            others = list(dst)
+        for k in others:
+            if stacked:
+                dst[k] = dst[k].at[:, slot].set(0)
+            else:
+                dst[k] = dst[k].at[slot].set(0)
+        return dst
+
+    for j, cl in cache["unit"].items():
+        out["unit"][j] = evict_layer(cl, stacked=True)
+    for i, cl in cache["rest"].items():
+        out["rest"][i] = evict_layer(cl, stacked=False)
     out["pos"] = cache["pos"].at[slot].set(0)
     return out
 
@@ -210,23 +494,49 @@ def _block_decode(bp, x, cl, cfg: ModelConfig, ctx: RunCtx, sig, kind: str,
                                      cfg.resolved_head_dim, cfg.rope_theta)
             q = L.apply_rotary(q, cos, sin)
             k = L.apply_rotary(k, cos, sin)
-        S = cl["k"].shape[1]
-        slot = pos % S  # full cache: pos < S so slot == pos; ring: wraps
-        # optimization_barrier keeps the cache update un-fused: XLA otherwise
-        # merges it with neighbouring converts and materialises an fp32 copy
-        # of the whole stacked cache as a fusion temp (2x cache memory)
-        if per_slot:
-            bidx = jnp.arange(k.shape[0])
+        if "bt" in cl:
+            # paged: pool (rows, pg, kv, hd) behind a (b, ncols) block table.
+            # Scatter this token into its slot's current page, then gather
+            # the slot's pages back into the same contiguous (b, S, kv, hd)
+            # view the fixed-slot path reads — identical values in, identical
+            # attention out, so the two layouts are bit-exact (freed slots
+            # write to their private scratch page; reads are kv_len-masked).
+            b = k.shape[0]
+            pg = cl["k"].shape[1]
+            ncols = cl["bt"].shape[1]
+            S = ncols * pg
+            r = pos % S
+            page = cl["bt"][jnp.arange(b), r // pg]
+            off = r % pg
             cl["k"], cl["v"] = jax.lax.optimization_barrier((
-                cl["k"].at[bidx, slot].set(k[:, 0]),
-                cl["v"].at[bidx, slot].set(v[:, 0])))
+                cl["k"].at[page, off].set(k[:, 0]),
+                cl["v"].at[page, off].set(v[:, 0])))
+            kvh, hd = cl["k"].shape[-2:]
+            k_view = cl["k"][cl["bt"]].reshape(b, S, kvh, hd)
+            v_view = cl["v"][cl["bt"]].reshape(b, S, kvh, hd)
+            o = decode_attention(q, k_view, v_view, jnp.minimum(pos + 1, S))
+            x = x + L.out_proj(bp["attn"], o)
         else:
-            cl["k"], cl["v"] = jax.lax.optimization_barrier((
-                jax.lax.dynamic_update_slice_in_dim(cl["k"], k, slot, axis=1),
-                jax.lax.dynamic_update_slice_in_dim(cl["v"], v, slot, axis=1)))
-        kv_len = jnp.minimum(pos + 1, S)
-        o = decode_attention(q, cl["k"], cl["v"], kv_len)
-        x = x + L.out_proj(bp["attn"], o)
+            S = cl["k"].shape[1]
+            slot = pos % S  # full cache: pos < S so slot == pos; ring: wraps
+            # optimization_barrier keeps the cache update un-fused: XLA
+            # otherwise merges it with neighbouring converts and materialises
+            # an fp32 copy of the whole stacked cache as a fusion temp
+            # (2x cache memory)
+            if per_slot:
+                bidx = jnp.arange(k.shape[0])
+                cl["k"], cl["v"] = jax.lax.optimization_barrier((
+                    cl["k"].at[bidx, slot].set(k[:, 0]),
+                    cl["v"].at[bidx, slot].set(v[:, 0])))
+            else:
+                cl["k"], cl["v"] = jax.lax.optimization_barrier((
+                    jax.lax.dynamic_update_slice_in_dim(cl["k"], k, slot,
+                                                        axis=1),
+                    jax.lax.dynamic_update_slice_in_dim(cl["v"], v, slot,
+                                                        axis=1)))
+            kv_len = jnp.minimum(pos + 1, S)
+            o = decode_attention(q, cl["k"], cl["v"], kv_len)
+            x = x + L.out_proj(bp["attn"], o)
     elif knd == RECURRENT:
         y, hh, conv = rglru_lib.rglru_decode_step(bp["rglru"], h, cl["h"],
                                                   cl["conv"])
@@ -446,3 +756,201 @@ def prefill_cache(params, tokens, cache, cfg: ModelConfig, ctx: RunCtx,
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
     logits = jnp.dot(x[:, -1], head).astype(jnp.float32)
     return logits, {"unit": new_unit, "rest": new_rest, "pos": pos + s}
+
+
+class ChunkedPrefill:
+    """Interleavable prefill: the prompt advances in scheduler-sized chunks.
+
+    Same contract as :func:`prefill_cache` — construct with a *fresh* cache
+    (whisper cross-K/V already populated) and, once every chunk has been
+    issued, ``finish()`` returns the identical ``(logits, cache)`` pair (to
+    float tolerance; exercised in tests/test_serve_scale.py) — but the work
+    happens across repeated ``step(n_tokens)`` calls, so the scheduler can
+    slip decode steps between chunks instead of stalling every active slot
+    for the prompt's full prefill cost.
+
+    Per-chunk mechanics: chunk ``[lo, hi)`` embeds at absolute positions
+    (RoPE / sinusoidal PE from ``lo``), each attention layer appends the
+    chunk's K/V to a contiguous carry and attends against the whole prefix
+    via ``chunked_attention(..., q_offset=lo)``, and recurrent/xLSTM layers
+    thread their states through.  SWA layers keep the carry *contiguous*
+    during prefill (attention over the in-flight full-length K/V is exact,
+    as in ``prefill_cache``); ``finish`` ring-folds into the cache layout.
+    """
+
+    def __init__(self, params, tokens, cache, cfg: ModelConfig, ctx: RunCtx,
+                 pattern: Optional[Sequence[str]] = None):
+        self.params, self.cfg, self.ctx = params, cfg, ctx
+        self.pattern = tuple(pattern) if pattern is not None else cfg.pattern
+        self.tokens = tokens
+        self.total = int(tokens.shape[1])
+        self.done_tokens = 0
+        self._cache0 = cache
+        self._sigs = layer_sigs(cfg)
+        self._u, self._reps, self._rem = stack_plan(self._sigs)
+        self._n_layers = self._u * self._reps + self._rem
+        self._carry: List[Any] = [None] * self._n_layers
+        self._logits = None
+
+    @property
+    def done(self) -> bool:
+        return self.done_tokens >= self.total
+
+    @property
+    def remaining(self) -> int:
+        return self.total - self.done_tokens
+
+    def _layer(self, li: int):
+        """(block params, init cache layer, sig, kind, window) for global
+        layer ``li`` — unit layers unstacked from their reps dim."""
+        u = self._u
+        if li < u * self._reps:
+            r, j = divmod(li, u)
+            bp = jax.tree.map(lambda a: a[r], self.params["unit"][f"p{j}"])
+            cl0 = jax.tree.map(lambda a: a[r], self._cache0["unit"][f"p{j}"])
+            pi = j
+        else:
+            bp = self.params["rest"][f"l{li}"]
+            cl0 = self._cache0["rest"][f"l{li}"]
+            pi = li
+        kind, window = _effective(self.cfg, self.pattern, pi)
+        return bp, cl0, self._sigs[pi], kind, window
+
+    def step(self, n_tokens: int) -> int:
+        """Advance prefill by up to ``n_tokens``; returns tokens processed."""
+        cfg, ctx = self.cfg, self.ctx
+        lo = self.done_tokens
+        hi = min(lo + int(n_tokens), self.total)
+        if hi <= lo:
+            return 0
+        toks = self.tokens[:, lo:hi]
+        x = jnp.take(self.params["embed"], toks,
+                     axis=0).astype(ctx.compute_dtype)
+        if cfg.family == "hybrid":
+            x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+        if cfg.family == "audio":
+            half = cfg.d_model // 2
+            freq = 10000.0 ** (-jnp.arange(half, dtype=jnp.float32) / half)
+            ang = jnp.arange(lo, hi, dtype=jnp.float32)[:, None] * freq
+            pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+            x = x + pe.astype(x.dtype)[None]
+            rope = (None, None)
+        else:
+            rope = L.rope_angles(jnp.arange(lo, hi), cfg.resolved_head_dim,
+                                 cfg.rope_theta)
+        for li in range(self._n_layers):
+            bp, cl0, sig, kind, window = self._layer(li)
+            x = self._block(bp, x, cl0, li, sig, kind, window, rope, lo)
+        x = _norm(self.params["final_norm"], x, cfg)
+        head = (self.params["embed"].T if cfg.tie_embeddings
+                else self.params["lm_head"])
+        self._logits = jnp.dot(x[:, -1], head).astype(jnp.float32)
+        self.done_tokens = hi
+        return hi - lo
+
+    def _block(self, bp, x, cl0, li, sig, kind, window, rope, lo):
+        cfg, ctx = self.cfg, self.ctx
+        knd, ffn = sig
+        st = self._carry[li]
+        h = _norm(bp["norm1"], x, cfg)
+        if knd in (ATTN_FULL, ATTN_SWA, ATTN_LOCAL):
+            q, k, v = L.qkv_proj(bp["attn"], h, cfg)
+            cos, sin = rope
+            if cos is not None:
+                q = L.apply_rotary(q, cos, sin)
+                k = L.apply_rotary(k, cos, sin)
+            if st is None:
+                k_all, v_all = k, v
+            else:
+                k_all = jnp.concatenate([st["k"], k], axis=1)
+                v_all = jnp.concatenate([st["v"], v], axis=1)
+            self._carry[li] = {"k": k_all, "v": v_all}
+            o = chunked_attention(q, k_all, v_all, kind=_PREFILL_MASK[kind],
+                                  window=window, q_offset=lo,
+                                  chunk_q=ctx.chunk_q, chunk_k=ctx.chunk_k)
+            x = x + L.out_proj(bp["attn"], o)
+        elif knd == RECURRENT:
+            y, (hh, conv) = rglru_lib.rglru_block(
+                bp["rglru"], h,
+                h0=None if st is None else st["h"],
+                conv0=None if st is None else st["conv"],
+                return_state=True)
+            self._carry[li] = {"h": hh, "conv": conv}
+            x = x + y
+        elif knd == MLSTM:
+            y, stt = xlstm_lib.mlstm_chunked(bp["mlstm"], h, cfg, state=st,
+                                             chunk=h.shape[1],
+                                             return_state=True)
+            self._carry[li] = stt
+            x = x + y
+        elif knd == SLSTM:
+            y, stt = xlstm_lib.slstm_block(bp["slstm"], h, cfg, state=st,
+                                           return_state=True)
+            self._carry[li] = stt
+            x = x + y
+        if "ck" in cl0:  # whisper cross-attention (encoder K/V precomputed)
+            hc = _norm(bp["norm_cross"], x, cfg)
+            qc, _, _ = L.qkv_proj(bp["cross"], hc, cfg)
+            oc = chunked_attention(qc, cl0["ck"], cl0["cv"], kind="bidir",
+                                   window=0, chunk_q=qc.shape[1],
+                                   chunk_k=ctx.chunk_k)
+            x = x + L.out_proj(bp["cross"], oc)
+        if ffn != "none":
+            h2 = _norm(bp["norm2"], x, cfg)
+            if ffn == "moe":
+                y, _ = moe_lib.moe_ffn(bp["moe"], h2, cfg, ctx)
+                x = x + y
+            else:
+                x = x + L.mlp(bp["mlp"], h2, ctx)
+        return x
+
+    def _fill_layer(self, cl0, li):
+        cl = dict(cl0)
+        st = self._carry[li]
+        s = self.total
+        if isinstance(st, xlstm_lib.MLSTMState):
+            cl["c"], cl["n"], cl["m"] = st.c, st.n, st.m
+        elif isinstance(st, xlstm_lib.SLSTMState):
+            cl["c"], cl["n"], cl["h"], cl["m"] = st.c, st.n, st.h, st.m
+        elif isinstance(st, dict) and "k" in st:
+            S = cl["k"].shape[1]
+            k_all = st["k"].astype(cl["k"].dtype)
+            v_all = st["v"].astype(cl["v"].dtype)
+            if s <= S:
+                cl["k"] = jax.lax.dynamic_update_slice_in_dim(
+                    cl["k"], k_all, 0, axis=1)
+                cl["v"] = jax.lax.dynamic_update_slice_in_dim(
+                    cl["v"], v_all, 0, axis=1)
+            else:
+                # same ring fold as prefill_cache: survivor at slot j is the
+                # last position ≡ j (mod S), all within the final S tokens
+                idx = jnp.arange(s - S, s) % S
+                cl["k"] = cl["k"].at[:, idx].set(k_all[:, s - S:])
+                cl["v"] = cl["v"].at[:, idx].set(v_all[:, s - S:])
+        elif isinstance(st, dict):
+            cl["h"], cl["conv"] = st["h"], st["conv"]
+        return cl
+
+    def finish(self):
+        """(last-position logits, filled cache) — ``prefill_cache``'s return
+        for the same prompt, assembled from the accumulated chunk state."""
+        if not self.done:
+            raise ValueError(
+                f"prefill incomplete: {self.done_tokens}/{self.total} tokens")
+        u, reps, rem = self._u, self._reps, self._rem
+        new_unit = {}
+        for j in range(u):
+            per_rep = []
+            for r in range(reps):
+                cl0 = jax.tree.map(lambda a: a[r],
+                                   self._cache0["unit"][f"p{j}"])
+                per_rep.append(self._fill_layer(cl0, r * u + j))
+            new_unit[f"p{j}"] = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                             *per_rep)
+        new_rest = {}
+        for i in range(rem):
+            li = u * reps + i
+            new_rest[f"l{li}"] = self._fill_layer(
+                self._cache0["rest"][f"l{li}"], li)
+        return self._logits, {"unit": new_unit, "rest": new_rest,
+                              "pos": self._cache0["pos"] + self.total}

@@ -1,7 +1,17 @@
 # repro.serve: continuous-batching streaming inference on the shared sim core.
+from repro.serve.control import (  # noqa: F401
+    DEFAULT_CHUNK_GRID, ServeAction, ServeController,
+)
 from repro.serve.engine import (  # noqa: F401
     DEADLINE, REQUEST_ARRIVAL, ContinuousBatchingServer, SlotRunner,
     StaticBatchingServer, StepCostModel, measured_cost_model,
 )
-from repro.serve.metrics import RequestRecord, summarize  # noqa: F401
-from repro.serve.requests import Request, RequestStream  # noqa: F401
+from repro.serve.metrics import (  # noqa: F401
+    RequestRecord, RollingWindow, summarize,
+)
+from repro.serve.requests import (  # noqa: F401
+    BurstyRequestStream, Request, RequestStream,
+)
+from repro.serve.scheduler import (  # noqa: F401
+    PRIORITIES, PRIORITY_DECODE_FIRST, PRIORITY_PREFILL_FIRST, Scheduler,
+)

@@ -57,11 +57,25 @@ class StepCostModel:
     def prefill_s(self, prompt_len: int) -> float:
         return self.prefill_base_s + self.prefill_token_s * prompt_len
 
+    def prefill_chunk_s(self, n_tokens: int) -> float:
+        """One interleaved prefill chunk: every chunk pays the dispatch base
+        again — the cost side of the chunking tradeoff the scheduler's
+        ``chunk_tokens`` knob navigates (smaller chunks = less decode stall
+        per chunk, more total base overhead)."""
+        return self.prefill_base_s + self.prefill_token_s * n_tokens
+
 
 def measured_cost_model(params, cfg, ctx, max_batch: int, cache_len: int,
                         prompt_len: int, reps: int = 3,
                         pattern=None) -> StepCostModel:
-    """Time the real jitted decode step + fused prefill on this host."""
+    """Time the real jitted decode step + fused prefill on this host.
+
+    Prefill is timed at *two* prompt lengths and fit as base + per-token:
+    folding the whole cost into ``prefill_token_s`` (the old behaviour)
+    silently charged each call's dispatch overhead per *token*, overcharging
+    short chunks — exactly the regime the chunked-interleaved scheduler
+    lives in, where one prompt becomes many small prefill calls.
+    """
     import jax
     import jax.numpy as jnp
 
@@ -73,9 +87,11 @@ def measured_cost_model(params, cfg, ctx, max_batch: int, cache_len: int,
         lambda p, c, t: decode_step(p, c, t, cfg, ctx, pattern=pattern))
     pre = jax.jit(
         lambda p, c, t: prefill_cache(p, t, c, cfg, ctx, pattern=pattern))
-    ptoks = jnp.zeros((1, prompt_len), jnp.int32)
-    pcache = init_cache(cfg, 1, cache_len, ctx, pattern=pattern)
-    pcache["pos"] = jnp.zeros((1,), jnp.int32)
+
+    def _pcache():
+        c = init_cache(cfg, 1, cache_len, ctx, pattern=pattern)
+        c["pos"] = jnp.zeros((1,), jnp.int32)
+        return c
 
     def _time(fn, *a):
         jax.block_until_ready(fn(*a))          # compile
@@ -85,9 +101,20 @@ def measured_cost_model(params, cfg, ctx, max_batch: int, cache_len: int,
         return (time.perf_counter() - t0) / reps
 
     t_step = _time(step, params, cache, toks)
-    t_pre = _time(pre, params, pcache, ptoks)
-    return StepCostModel(decode_step_s=t_step,
-                         prefill_token_s=t_pre / prompt_len)
+    l1 = max(1, prompt_len // 2)
+    t2 = _time(pre, params, _pcache(),
+               jnp.zeros((1, prompt_len), jnp.int32))
+    if l1 == prompt_len:
+        return StepCostModel(decode_step_s=t_step,
+                             prefill_token_s=t2 / prompt_len)
+    t1 = _time(pre, params, _pcache(), jnp.zeros((1, l1), jnp.int32))
+    tok = (t2 - t1) / (prompt_len - l1)
+    if tok <= 0:            # timing noise swamped the slope; fall back
+        return StepCostModel(decode_step_s=t_step,
+                             prefill_token_s=t2 / prompt_len)
+    base = max(0.0, t1 - tok * l1)
+    return StepCostModel(decode_step_s=t_step, prefill_token_s=tok,
+                         prefill_base_s=base)
 
 
 class SlotRunner:
@@ -100,20 +127,38 @@ class SlotRunner:
     """
 
     def __init__(self, params, cfg, ctx, max_batch: int, cache_len: int,
-                 pattern=None, temperature: float = 0.0, seed: int = 0):
+                 pattern=None, temperature: float = 0.0, seed: int = 0,
+                 page_size: Optional[int] = None,
+                 num_pages: Optional[int] = None):
         import jax
         import jax.numpy as jnp
 
-        from repro.models.decode import (decode_step, init_cache,
-                                         init_slot_cache, prefill_cache,
+        from repro.models.decode import (PagePool, init_cache,
+                                         init_paged_cache, init_slot_cache,
+                                         decode_step, prefill_cache,
                                          slot_insert)
         self._jax, self._jnp = jax, jnp
         self.cfg, self.ctx = cfg, ctx
         self.params = params
         self.max_batch, self.cache_len = max_batch, cache_len
         self.temperature = temperature
-        self.cache = init_slot_cache(cfg, max_batch, cache_len, ctx,
-                                     pattern=pattern)
+        self._pattern = pattern
+        # paged mode: K/V behind block tables, pages from a host PagePool
+        # (slot_insert/slot_evict dispatch on the cache layout)
+        self.page_size = page_size
+        if page_size is not None:
+            if num_pages is None:
+                raise ValueError("paged runner needs num_pages")
+            self.cache = init_paged_cache(cfg, max_batch, cache_len, ctx,
+                                          page_size=page_size,
+                                          num_pages=num_pages,
+                                          pattern=pattern)
+            self.pool: Optional[PagePool] = PagePool(num_pages)
+        else:
+            self.cache = init_slot_cache(cfg, max_batch, cache_len, ctx,
+                                         pattern=pattern)
+            self.pool = None
+        self._slot_pages: Dict[int, List[int]] = {}
         self._step = jax.jit(
             lambda p, c, t: decode_step(p, c, t, cfg, ctx, pattern=pattern))
         self._prefill = jax.jit(
@@ -141,11 +186,49 @@ class SlotRunner:
                 sk, logits / self.temperature, axis=-1)
         return self._jnp.argmax(logits, axis=-1)
 
+    def pages_for(self, req: Request) -> int:
+        """Pages ``req`` needs for its full lifetime (0 in fixed-slot mode)."""
+        if self.pool is None:
+            return 0
+        from repro.models.decode import pages_needed
+        return pages_needed(self.cfg, self.cache_len, self.page_size,
+                            req.prompt_len + req.max_new_tokens,
+                            self._pattern)
+
+    def can_admit(self, req: Request) -> bool:
+        return self.pool is None or self.pages_for(req) <= self.pool.available
+
     def admit(self, slot: int, req: Request) -> None:
         """Fused prefill + slot insert; samples the request's first token."""
         logits, src = self._prefill(self.params, self._init_one(),
                                     self.prompt_tokens(req))
-        self.cache = self._insert(self.cache, slot, src)
+        self._insert_slot(slot, req, logits, src)
+
+    def start_prefill(self, req: Request):
+        """A ChunkedPrefill job for ``req`` — the scheduler advances it with
+        ``job.step(n)`` between decode steps and lands it via
+        :meth:`finish_prefill`."""
+        from repro.models.decode import ChunkedPrefill
+        return ChunkedPrefill(self.params, self.prompt_tokens(req),
+                              self._init_one(), self.cfg, self.ctx,
+                              pattern=self._pattern)
+
+    def finish_prefill(self, slot: int, req: Request, job) -> None:
+        """Insert a completed ChunkedPrefill job into ``slot``."""
+        logits, src = job.finish()
+        self._insert_slot(slot, req, logits, src)
+
+    def _insert_slot(self, slot: int, req: Request, logits, src) -> None:
+        if self.pool is not None:
+            pages = self.pool.alloc(self.pages_for(req))
+            if pages is None:
+                raise RuntimeError(
+                    f"page pool exhausted admitting rid={req.rid} "
+                    f"(available={self.pool.available})")
+            self._slot_pages[slot] = pages
+            self.cache = self._insert(self.cache, slot, src, pages=pages)
+        else:
+            self.cache = self._insert(self.cache, slot, src)
         first = int(self._sample(logits)[0])
         self.next_tok = self.next_tok.at[slot].set(first)
         self.generated[req.rid] = [first]
@@ -165,6 +248,13 @@ class SlotRunner:
 
     def release(self, slot: int) -> None:
         self._slot_rid[slot] = None
+        if self.pool is not None:
+            # retarget the slot's block table at its scratch page *before*
+            # returning pages: the freed slot keeps riding the jitted batch
+            # and must not scatter into pages another request may get next
+            from repro.models.decode import paged_evict
+            self.cache = paged_evict(self.cache, slot)
+            self.pool.free(self._slot_pages.pop(slot))
 
 
 def _with_vec_pos(cache, jnp):
@@ -255,6 +345,11 @@ class ContinuousBatchingServer(_ServerBase):
                         > r.arrival_s + r.slo_ttft_s
                         or clock.now > r.deadline_s):
                     recs[r.rid].dropped = "expired_in_queue"
+                    # same ledger event _drop_expired emits: without it the
+                    # tracker's drop count disagrees with the records'
+                    if self.tracker.active:
+                        serve_event(self.tracker, "drop", rid=r.rid,
+                                    t=clock.now, reason="expired_in_queue")
                     continue
                 slot = free.pop()
                 rec = recs[r.rid]

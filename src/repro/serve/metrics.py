@@ -10,11 +10,20 @@
   late, count for nothing.  This is the serving analogue of the trainer's
   effective-samples metric, and the headline number of
   ``benchmarks/serving.py``.
+* **queue wait** — arrival to admission (prefill start): the pure
+  time-in-queue component of TTFT, so scheduler comparisons separate
+  "waited for a slot" from "prefill was slow".
+
+:class:`RollingWindow` folds terminal request events into a sliding
+deadline-met-goodput estimate — the online objective the serve controller
+climbs on (``serve/control.py``), mirroring the fleet engine's rolling
+round telemetry.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from collections import deque
+from typing import Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -58,6 +67,13 @@ class RequestRecord:
             return None
         return (self.finish_s - self.first_token_s) / (self.tokens_out - 1)
 
+    @property
+    def queue_wait_s(self) -> Optional[float]:
+        """Arrival to admission — time-in-queue, excluding prefill."""
+        if self.admit_s is None:
+            return None
+        return self.admit_s - self.arrival_s
+
 
 def _pct(vals: List[float], q: float) -> float:
     return float(np.percentile(np.asarray(vals), q)) if vals else float("nan")
@@ -71,6 +87,7 @@ def request_records(records: List[RequestRecord]) -> List[Dict]:
         "rid": r.rid,
         "arrival_s": r.arrival_s,
         "admit_s": r.admit_s,
+        "queue_wait_s": r.queue_wait_s,
         "ttft_s": r.ttft_s,
         "tpot_s": r.tpot_s,
         "finish_s": r.finish_s,
@@ -85,6 +102,7 @@ def summarize(records: List[RequestRecord], horizon_s: float) -> Dict:
     n = len(records)
     ttft = [r.ttft_s for r in records if r.ttft_s is not None]
     tpot = [r.tpot_s for r in records if r.tpot_s is not None]
+    qwait = [r.queue_wait_s for r in records if r.queue_wait_s is not None]
     good_tokens = sum(r.tokens_out for r in records if r.met_deadline)
     all_tokens = sum(r.tokens_out for r in records)
     completed = sum(r.completed for r in records)
@@ -100,6 +118,47 @@ def summarize(records: List[RequestRecord], horizon_s: float) -> Dict:
         "ttft_p99_s": _pct(ttft, 99),
         "tpot_p50_s": _pct(tpot, 50), "tpot_p95_s": _pct(tpot, 95),
         "tpot_p99_s": _pct(tpot, 99),
+        "queue_wait_p50_s": _pct(qwait, 50),
+        "queue_wait_p95_s": _pct(qwait, 95),
         "throughput_tok_s": all_tokens / horizon,
         "goodput_tok_s": good_tokens / horizon,
     }
+
+
+class RollingWindow:
+    """Sliding deadline-met-goodput estimator over terminal request events.
+
+    The scheduler calls :meth:`record` once per request at its terminal
+    event (finish / evict / drop) with the tokens that counted toward
+    goodput (``tokens_out`` if the request met its SLO, else 0).
+    :meth:`goodput` divides the surviving window total by the window span —
+    a noisy-but-fresh objective an online controller can climb on without
+    waiting for end-of-run ``summarize``.
+    """
+
+    def __init__(self, window_s: float):
+        if window_s <= 0:
+            raise ValueError("window_s must be positive")
+        self.window_s = float(window_s)
+        self._events: Deque[Tuple[float, int]] = deque()
+
+    def _trim(self, now: float) -> None:
+        while self._events and self._events[0][0] < now - self.window_s:
+            self._events.popleft()
+
+    def record(self, t: float, good_tokens: int) -> None:
+        # lanes complete actions at interleaved future times, so terminal
+        # events arrive nearly-but-not-exactly ordered; clamp into order
+        if self._events and t < self._events[-1][0]:
+            t = self._events[-1][0]
+        self._events.append((t, int(good_tokens)))
+        self._trim(t)
+
+    def n_events(self, now: float) -> int:
+        self._trim(now)
+        return len(self._events)
+
+    def goodput(self, now: float) -> float:
+        """Deadline-met tokens/s over the trailing window."""
+        self._trim(now)
+        return sum(g for _, g in self._events) / self.window_s

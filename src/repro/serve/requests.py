@@ -17,7 +17,7 @@ deadline-met tokens toward goodput.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Union
+from typing import List, Optional, Sequence, Union
 
 import numpy as np
 
@@ -57,10 +57,18 @@ class RequestStream:
     slo_ttft_s: float = 0.75
     slo_tpot_s: float = 0.05
     seed: int = 0
+    # mixed workload: each request draws its prompt length uniformly from
+    # this tuple (a client's next arrival waits for the *drawn* prompt to
+    # stream in, so long prompts are also rarer per unit time).  None keeps
+    # the fixed-length stream — and its exact RNG draw sequence, which the
+    # perf-gate baselines pin.
+    prompt_lens: Optional[Sequence[int]] = None
 
     def __post_init__(self):
         if isinstance(self.dist, str):
             self.dist = TABLE_I[self.dist]
+        if self.prompt_lens is not None:
+            self.prompt_lens = tuple(int(p) for p in self.prompt_lens)
 
     def deadline_for(self, arrival_s: float) -> float:
         return (arrival_s + self.slo_ttft_s
@@ -69,17 +77,82 @@ class RequestStream:
     def generate(self, horizon_s: float) -> List[Request]:
         rng = np.random.default_rng(self.seed)
         rates = self.dist.sample(rng, self.n_clients).astype(np.float64)
-        interarrival = self.prompt_len / rates             # streaming_latency
-        phase = rng.uniform(0.0, interarrival)             # desynchronised
-        reqs: List[Request] = []
-        for c in range(self.n_clients):
-            t = float(phase[c])
-            while t < horizon_s:
-                reqs.append(Request(
-                    rid=0, arrival_s=t, prompt_len=self.prompt_len,
-                    max_new_tokens=self.max_new_tokens,
-                    deadline_s=self.deadline_for(t),
-                    slo_ttft_s=self.slo_ttft_s, client=c))
-                t += float(interarrival[c])
+        if self.prompt_lens is None:
+            interarrival = self.prompt_len / rates         # streaming_latency
+            phase = rng.uniform(0.0, interarrival)         # desynchronised
+            reqs: List[Request] = []
+            for c in range(self.n_clients):
+                t = float(phase[c])
+                while t < horizon_s:
+                    reqs.append(Request(
+                        rid=0, arrival_s=t, prompt_len=self.prompt_len,
+                        max_new_tokens=self.max_new_tokens,
+                        deadline_s=self.deadline_for(t),
+                        slo_ttft_s=self.slo_ttft_s, client=c))
+                    t += float(interarrival[c])
+        else:
+            mean_len = float(np.mean(self.prompt_lens))
+            phase = rng.uniform(0.0, mean_len / rates)
+            reqs = []
+            for c in range(self.n_clients):
+                t = float(phase[c])
+                while t < horizon_s:
+                    plen = int(rng.choice(self.prompt_lens))
+                    reqs.append(Request(
+                        rid=0, arrival_s=t, prompt_len=plen,
+                        max_new_tokens=self.max_new_tokens,
+                        deadline_s=self.deadline_for(t),
+                        slo_ttft_s=self.slo_ttft_s, client=c))
+                    t += plen / float(rates[c])    # gather time of this prompt
         reqs.sort(key=lambda r: r.arrival_s)
         return [dataclasses.replace(r, rid=i) for i, r in enumerate(reqs)]
+
+
+@dataclasses.dataclass
+class BurstyRequestStream:
+    """Aggregate bursty arrivals: the millions-of-users front view.
+
+    Instead of per-client token streams, model the *aggregate* request
+    arrival at a serving endpoint as a non-homogeneous Poisson process:
+    ``base_rate`` requests/s, multiplied by ``burst_mult`` for
+    ``burst_len_s`` out of every ``burst_every_s`` (flash-crowd cadence).
+    Generated by thinning, so the trace is exact for the piecewise-constant
+    rate.  Prompt lengths draw uniformly from ``prompt_lens`` — the mixed
+    workload where chunked-interleaved prefill earns its TTFT tail.
+    """
+    base_rate: float = 40.0
+    burst_mult: float = 4.0
+    burst_every_s: float = 4.0
+    burst_len_s: float = 1.0
+    prompt_lens: Sequence[int] = (32, 128)
+    max_new_tokens: int = 32
+    slo_ttft_s: float = 0.75
+    slo_tpot_s: float = 0.05
+    seed: int = 0
+
+    def rate_at(self, t: float) -> float:
+        in_burst = (t % self.burst_every_s) < self.burst_len_s
+        return self.base_rate * (self.burst_mult if in_burst else 1.0)
+
+    def deadline_for(self, arrival_s: float) -> float:
+        return (arrival_s + self.slo_ttft_s
+                + self.slo_tpot_s * self.max_new_tokens)
+
+    def generate(self, horizon_s: float) -> List[Request]:
+        rng = np.random.default_rng(self.seed)
+        lam_max = self.base_rate * max(1.0, self.burst_mult)
+        reqs: List[Request] = []
+        t = 0.0
+        while True:
+            t += float(rng.exponential(1.0 / lam_max))
+            if t >= horizon_s:
+                break
+            if rng.uniform() > self.rate_at(t) / lam_max:
+                continue            # thinned: outside the current rate
+            plen = int(rng.choice(tuple(self.prompt_lens)))
+            reqs.append(Request(
+                rid=len(reqs), arrival_s=t, prompt_len=plen,
+                max_new_tokens=self.max_new_tokens,
+                deadline_s=self.deadline_for(t),
+                slo_ttft_s=self.slo_ttft_s, client=0))
+        return reqs

@@ -1,0 +1,373 @@
+"""Serving at scale: paged KV caches, chunked-interleaved prefill, the
+multi-runner scheduler, and the hill-climb serving controller."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+from repro.fleet.control import ClimbCore  # noqa: E402
+from repro.models import RunCtx, init_params  # noqa: E402
+from repro.models.decode import (ChunkedPrefill, PagePool, decode_step,  # noqa: E402
+                                 init_cache, init_paged_cache,
+                                 init_slot_cache, pages_needed,
+                                 prefill_cache, slot_evict, slot_insert)
+from repro.obs import SERVE_EVENT, MemoryTracker  # noqa: E402
+from repro.serve import (BurstyRequestStream, ContinuousBatchingServer,  # noqa: E402
+                         PRIORITIES, Request, RequestStream, Scheduler,
+                         ServeController, SlotRunner, StepCostModel)
+from repro.serve.metrics import RollingWindow  # noqa: E402
+
+CTX = RunCtx(remat=False, chunk_q=8, chunk_k=8, loss_chunk=8)
+
+# one representative per cache family: dense KV, SWA ring, RG-LRU, xLSTM
+FAMILIES = ["qwen2-0.5b", "mixtral-8x22b", "recurrentgemma-2b", "xlstm-125m"]
+
+# the stress cost model the perf gate pins (decode 10ms, 0.5ms/token prefill
+# + 2ms dispatch base so chunk granularity has a real cost side)
+COST = StepCostModel(decode_step_s=0.01, prefill_token_s=5e-4,
+                     prefill_base_s=2e-3)
+
+
+def _cfg(arch):
+    cfg = get_config(arch).reduced()
+    if arch == "mixtral-8x22b":
+        cfg = dataclasses.replace(cfg, window_size=8)  # exercise ring wrap
+    return cfg
+
+
+def _s2_requests(horizon=8.0):
+    return RequestStream(dist="S2", n_clients=12, prompt_lens=(16, 64, 256),
+                         max_new_tokens=16, slo_ttft_s=0.25, slo_tpot_s=0.05,
+                         seed=0).generate(horizon)
+
+
+# ---------------------------------------------------------------------------
+# paged KV cache: bit-exactness against the fixed-slot layout
+
+
+@pytest.mark.parametrize("arch", FAMILIES)
+def test_paged_cache_bit_exact(arch):
+    """Fixed-slot and paged caches at identical occupancy decode the same
+    logits bit-for-bit, through inserts, decode steps, and a mid-flight
+    evict whose pages get recycled."""
+    cfg = _cfg(arch)
+    params = init_params(jax.random.PRNGKey(1), cfg)
+    max_batch, cache_len, page = 4, 32, 8
+    prompts, gen = [5, 11, 3], 6
+
+    fixed = init_slot_cache(cfg, max_batch, cache_len, CTX)
+    paged = init_paged_cache(cfg, max_batch, cache_len, CTX,
+                             page_size=page, num_pages=32)
+    pool = PagePool(32)
+    page_lists = []
+    for slot, plen in enumerate(prompts):
+        toks = jax.random.randint(jax.random.PRNGKey(10 + slot), (1, plen),
+                                  0, cfg.vocab_size)
+        fresh = init_cache(cfg, 1, cache_len, CTX)
+        _, src = prefill_cache(params, toks, fresh, cfg, CTX)
+        fixed = slot_insert(fixed, slot, src)
+        pages = pool.alloc(pages_needed(cfg, cache_len, page, plen + gen))
+        page_lists.append(pages)
+        paged = slot_insert(paged, slot, src, pages=pages)
+    np.testing.assert_array_equal(np.asarray(fixed["pos"]),
+                                  np.asarray(paged["pos"]))
+
+    tok = jnp.array([[3], [7], [1], [0]], jnp.int32)
+    step = jax.jit(lambda c, t: decode_step(params, c, t, cfg, CTX))
+    for i in range(gen):
+        lf, fixed = step(fixed, tok)
+        lp, paged = step(paged, tok)
+        np.testing.assert_array_equal(np.asarray(lf[:3]), np.asarray(lp[:3]))
+        if i == 2:      # evict slot 1 mid-flight; survivors must stay exact
+            fixed = slot_evict(fixed, 1)
+            paged = slot_evict(paged, 1)
+            pool.free(page_lists[1])
+
+
+def test_page_pool_semantics():
+    pool = PagePool(4)
+    got = pool.alloc(3)
+    assert len(got) == 3 and pool.available == 1
+    assert pool.alloc(2) is None        # insufficient: no partial grant
+    assert pool.available == 1
+    pool.free(got)
+    assert pool.available == 4
+    with pytest.raises(ValueError):
+        pool.free(got)                  # double free
+
+
+def test_pages_needed_respects_swa_window():
+    """A sliding-window layer caps its cache at the window, so a long
+    request needs no more pages than the window covers."""
+    dense = _cfg("qwen2-0.5b")          # full attention: needs the lot
+    swa = _cfg("mixtral-8x22b")         # window_size=8 caps every layer
+    assert pages_needed(dense, 32, 8, 32) == 32 // 8
+    assert pages_needed(dense, 32, 8, 8) == 1   # short prompt, few pages
+    assert pages_needed(swa, 32, 8, 32) < pages_needed(dense, 32, 8, 32)
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill: equivalence with the fused one-pass prefill
+
+
+@pytest.mark.parametrize("arch", FAMILIES)
+def test_chunked_prefill_matches_whole(arch):
+    cfg = _cfg(arch)
+    params = init_params(jax.random.PRNGKey(1), cfg)
+    cache_len, plen = 32, 13
+    toks = jax.random.randint(jax.random.PRNGKey(99), (1, plen), 0,
+                              cfg.vocab_size)
+    lg_whole, cache_whole = prefill_cache(
+        params, toks, init_cache(cfg, 1, cache_len, CTX), cfg, CTX)
+    cp = ChunkedPrefill(params, toks, init_cache(cfg, 1, cache_len, CTX),
+                        cfg, CTX)
+    while not cp.done:
+        cp.step(4)                      # uneven final chunk (13 = 4+4+4+1)
+    lg_chunk, cache_chunk = cp.finish()
+    np.testing.assert_allclose(np.asarray(lg_whole), np.asarray(lg_chunk),
+                               atol=4e-6, rtol=1e-5)
+    for (path, a), b in zip(
+            jax.tree_util.tree_leaves_with_path(cache_whole),
+            jax.tree_util.tree_leaves(cache_chunk)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=4e-6,
+                                   rtol=1e-5, err_msg=str(path))
+
+
+def test_chunked_prefill_guards():
+    cfg = _cfg("qwen2-0.5b")
+    params = init_params(jax.random.PRNGKey(1), cfg)
+    toks = jnp.zeros((1, 8), jnp.int32)
+    cp = ChunkedPrefill(params, toks, init_cache(cfg, 1, 32, CTX), cfg, CTX)
+    with pytest.raises(ValueError):
+        cp.finish()                     # not done yet
+    cp.step(8)
+    assert cp.done and cp.remaining == 0
+
+
+# ---------------------------------------------------------------------------
+# real runner: paged generation identity + insufficient-pages shedding
+
+
+def test_paged_runner_generation_identity():
+    """The same trace through a fixed-slot and a paged SlotRunner (behind
+    the scheduler, chunked prefill) yields identical token streams."""
+    cfg = _cfg("qwen2-0.5b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    reqs = RequestStream(dist="S1", n_clients=4, prompt_lens=(8, 24),
+                         max_new_tokens=6, slo_ttft_s=2.0, slo_tpot_s=0.5,
+                         seed=0).generate(3.0)
+    cost = StepCostModel(decode_step_s=0.01, prefill_token_s=5e-4,
+                         prefill_base_s=1e-3)
+
+    def run(**kw):
+        runner = SlotRunner(params, cfg, CTX, 2, 48, **kw)
+        _, s = Scheduler(2, cost, runners=[runner],
+                         chunk_tokens=8).run(reqs, horizon_s=3.0)
+        assert s["conservation_ok"]
+        return runner.generated
+
+    fixed = run()
+    paged = run(page_size=16, num_pages=8)
+    assert fixed.keys() == paged.keys() and len(fixed) > 0
+    for rid in fixed:
+        assert fixed[rid] == paged[rid], f"rid {rid} diverged"
+
+
+def test_insufficient_pages_sheds_oversized_request():
+    cfg = _cfg("qwen2-0.5b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    runner = SlotRunner(params, cfg, CTX, 2, 32, page_size=8, num_pages=2)
+    big = Request(rid=0, arrival_s=0.0, prompt_len=16, max_new_tokens=8,
+                  deadline_s=10.0, slo_ttft_s=10.0)
+    assert not runner.can_admit(big)
+    recs, s = Scheduler(2, COST, runners=[runner]).run([big], horizon_s=1.0)
+    assert s["conservation_ok"]
+    assert recs[0].dropped == "insufficient_pages"
+
+
+# ---------------------------------------------------------------------------
+# scheduler: conservation, the chunked win, multi-runner fan-out
+
+
+def test_scheduler_conservation_across_grid():
+    reqs = _s2_requests()
+    for chunk in (None, 16, 64):
+        for prio in PRIORITIES:
+            recs, s = Scheduler(4, COST, chunk_tokens=chunk,
+                                priority=prio).run(reqs, horizon_s=8.0)
+            assert s["conservation_ok"], (chunk, prio)
+            done = sum(r.finish_s is not None for r in recs)
+            dropped = sum(r.dropped is not None for r in recs)
+            assert done + dropped == len(reqs)
+
+
+def test_chunked_interleaved_beats_whole_prompt():
+    """Near overload with mixed prompt lengths: chunked prefill must win on
+    deadline-met goodput AND the TTFT tail (the perf gate pins the exact
+    values; this is the structural claim)."""
+    reqs = _s2_requests()
+    _, whole = ContinuousBatchingServer(4, COST).run(reqs, horizon_s=8.0)
+    _, chunked = Scheduler(4, COST, chunk_tokens=64,
+                           priority="decode_first").run(reqs, horizon_s=8.0)
+    assert chunked["goodput_tok_s"] > whole["goodput_tok_s"]
+    assert chunked["ttft_p95_s"] < whole["ttft_p95_s"]
+
+
+def test_deadline_evicts_mid_prefill():
+    """A prompt admitted with a feasible solo ETA but starved by a later
+    arrival's round-robin share is evicted mid-prefill, not ground out."""
+    cost = StepCostModel(decode_step_s=0.01, prefill_token_s=1e-3)
+    a = Request(rid=0, arrival_s=0.0, prompt_len=200, max_new_tokens=4,
+                deadline_s=0.3, slo_ttft_s=0.25)
+    b = Request(rid=1, arrival_s=0.01, prompt_len=200, max_new_tokens=4,
+                deadline_s=1.0, slo_ttft_s=0.6)
+    recs, s = Scheduler(4, cost, chunk_tokens=16).run([a, b], horizon_s=2.0)
+    assert s["conservation_ok"]
+    assert recs[0].dropped == "slo_miss" and recs[0].first_token_s is None
+    assert recs[1].finish_s is not None
+
+
+def test_multi_runner_scaling():
+    reqs = BurstyRequestStream(base_rate=30.0, burst_mult=4.0,
+                               prompt_lens=(16, 64, 256), max_new_tokens=16,
+                               slo_ttft_s=0.25, slo_tpot_s=0.05,
+                               seed=1).generate(8.0)
+    out = {}
+    for n in (1, 4):
+        _, s = Scheduler(4, COST, n_runners=n, chunk_tokens=32,
+                         priority="prefill_first").run(reqs, horizon_s=8.0)
+        assert s["conservation_ok"]
+        out[n] = s["goodput_tok_s"]
+    assert out[4] > 1.5 * out[1]
+
+
+def test_shrinking_active_runners_requeues_work():
+    """Deactivating lanes mid-run hands their queued requests back to the
+    live lanes; nothing is lost."""
+    reqs = _s2_requests(horizon=6.0)
+
+    class Shrink:
+        def tick(self, now, sched):
+            if now >= 2.0 and sched.active_runners > 1:
+                sched.set_active_runners(1)
+
+    _, s = Scheduler(4, COST, n_runners=4, chunk_tokens=32).run(
+        reqs, horizon_s=6.0, controller=Shrink(), control_every_s=1.0)
+    assert s["conservation_ok"] and s["active_runners"] == 1
+
+
+def test_queue_wait_percentiles_reported():
+    _, s = Scheduler(4, COST, chunk_tokens=64).run(_s2_requests(),
+                                                   horizon_s=8.0)
+    assert 0.0 <= s["queue_wait_p50_s"] <= s["queue_wait_p95_s"]
+
+
+def test_expired_in_queue_emits_drop_event():
+    """Satellite fix: the continuous server's admission-expiry drop now
+    lands in the ledger, so event counts reconcile with the summary."""
+    mt = MemoryTracker()
+    reqs = _s2_requests()
+    recs, s = ContinuousBatchingServer(4, COST, tracker=mt).run(
+        reqs, horizon_s=8.0)
+    drops = [r["data"] for r in mt.of_kind(SERVE_EVENT)
+             if r["data"]["event"] == "drop"]
+    assert len(drops) == sum(r.dropped == "expired_in_queue" for r in recs)
+    assert len(drops) > 0
+
+
+# ---------------------------------------------------------------------------
+# control: the reusable climb core + the serving controller
+
+
+def test_climbcore_relax_tie_and_revert():
+    core = ClimbCore(0, 10, 5, tol=0.05, probe_every=2, relax_dir=-1)
+    assert core.observe(1.0) == (4, "probe")      # explores the relax end
+    assert core.observe(1.0) == (5, "confirm")    # ambiguous: re-run the ref
+    assert core.observe(1.0) == (4, "accept")     # tie rides to relaxed
+    assert core.ref == 4 and core.step == 2
+    # accept pre-charges the settle counter: one settle window re-anchors
+    # the reference and immediately probes onward with the doubled step
+    assert core.observe(1.0) == (2, "probe")
+    assert core.observe(0.3) == (4, "confirm")
+    assert core.observe(1.0) is None              # clear loss: revert in place
+    assert core.ref == 4 and core.step == 1 and core.direction == 1
+
+
+def test_climbcore_tighten_needs_proof():
+    core = ClimbCore(0, 10, 0, tol=0.05, probe_every=2, relax_dir=-1)
+    assert core.observe(1.0) == (1, "probe")      # at lo: must tighten
+    assert core.observe(1.0) == (0, "confirm")    # tie while tightening
+    assert core.observe(1.0) is None              # ...is a reject
+    assert core.ref == 0
+
+
+def test_serve_controller_tracks_best_static():
+    reqs = BurstyRequestStream(base_rate=30.0, burst_mult=4.0,
+                               prompt_lens=(16, 64, 256), max_new_tokens=16,
+                               slo_ttft_s=0.25, slo_tpot_s=0.05,
+                               seed=1).generate(8.0)
+    best = 0.0
+    for c in (None, 64):
+        for p in PRIORITIES:
+            for n in (1, 4):
+                _, s = Scheduler(4, COST, n_runners=n, chunk_tokens=c,
+                                 priority=p).run(reqs, horizon_s=8.0)
+                best = max(best, s["goodput_tok_s"])
+    ctrl = ServeController()
+    _, cs = Scheduler(4, COST, n_runners=4).run(
+        reqs, horizon_s=8.0, controller=ctrl,
+        control_every_s=1.0, window_s=1.0)
+    assert cs["conservation_ok"]
+    assert cs["goodput_tok_s"] >= 0.95 * best
+    assert len(ctrl.actions) > 0
+    grid = set(ctrl.chunk_grid)
+    for a in ctrl.actions:
+        if a.axis == "chunk_tokens":
+            assert a.value in grid
+        elif a.axis == "priority":
+            assert a.value in PRIORITIES
+        else:
+            assert 1 <= a.value <= 4
+
+
+# ---------------------------------------------------------------------------
+# metrics + streams
+
+
+def test_rolling_window_goodput():
+    w = RollingWindow(2.0)
+    w.record(0.5, 10)
+    w.record(1.0, 10)
+    assert w.goodput(1.0) == pytest.approx(10.0)   # 20 tokens / 2 s
+    assert w.goodput(3.4) == pytest.approx(0.0)    # both aged out
+    w.record(4.0, 6)
+    w.record(3.0, 4)                               # out of order: clamped
+    assert w.n_events(4.0) == 2
+    assert w.goodput(4.0) == pytest.approx(5.0)
+
+
+def test_bursty_stream_shape():
+    s = BurstyRequestStream(base_rate=10.0, burst_mult=5.0, burst_every_s=4.0,
+                            burst_len_s=1.0, seed=3)
+    assert s.rate_at(0.5) == 50.0 and s.rate_at(2.0) == 10.0
+    reqs = s.generate(12.0)
+    arr = [r.arrival_s for r in reqs]
+    assert arr == sorted(arr) and len(reqs) > 0
+    in_burst = sum(1 for t in arr if (t % 4.0) < 1.0)
+    assert in_burst > len(arr) / 3      # bursts carry an outsized share
+    for r in reqs[:5]:
+        assert r.deadline_s > r.arrival_s + r.slo_ttft_s
+
+
+def test_request_stream_mixed_lengths():
+    reqs = RequestStream(dist="S2", n_clients=4, prompt_lens=(16, 256),
+                         max_new_tokens=8, seed=0).generate(5.0)
+    lens = {r.prompt_len for r in reqs}
+    assert lens <= {16, 256} and len(lens) == 2
+    again = RequestStream(dist="S2", n_clients=4, prompt_lens=(16, 256),
+                          max_new_tokens=8, seed=0).generate(5.0)
+    assert [r.prompt_len for r in reqs] == [r.prompt_len for r in again]
