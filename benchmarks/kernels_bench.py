@@ -10,7 +10,75 @@ import jax.numpy as jnp
 from benchmarks.common import emit, timeit, write_json_artifact
 from repro.core.compression import sparsify_mask
 from repro.kernels import ops
+from repro.kernels.flash_decode import flash_decode, flash_decode_paged
 from repro.kernels.ref import block_topk_ref
+from repro.kernels.scatter_agg import scatter_aggregate
+from repro.models.attention import decode_attention
+
+
+def _flash_decode_rows():
+    """Flash-decode over a slots x seq-len grid: contiguous + paged cells,
+    oracle max-err and wall times (interpret on CPU — correctness numbers;
+    the jax oracle wall time is the XLA baseline the kernel replaces)."""
+    rows = []
+    h, kvh, hd, pg = 8, 4, 64, 128
+    for b in (4, 16):
+        for S in (128, 512):
+            key = jax.random.PRNGKey(b * 1000 + S)
+            kq, kk, kv, kl = jax.random.split(key, 4)
+            q = jax.random.normal(kq, (b, 1, h, hd))
+            k = jax.random.normal(kk, (b, S, kvh, hd))
+            v = jax.random.normal(kv, (b, S, kvh, hd))
+            kvl = jax.random.randint(kl, (b,), 1, S + 1)
+            kern = jax.jit(lambda q, k, v, l: flash_decode(q, k, v, l))
+            orac = jax.jit(lambda q, k, v, l: decode_attention(q, k, v, l))
+            err = float(jnp.max(jnp.abs(kern(q, k, v, kvl)
+                                        - orac(q, k, v, kvl))))
+            us_k = timeit(lambda: jax.block_until_ready(kern(q, k, v, kvl)),
+                          n=3)
+            us_j = timeit(lambda: jax.block_until_ready(orac(q, k, v, kvl)),
+                          n=3)
+            emit(f"kernel_flash_decode_b{b}_s{S}", us_k,
+                 f"max_err={err:.2e};jax_us={us_j:.0f}")
+            rows.append({"kernel": "flash_decode", "slots": b, "seq": S,
+                         "kernel_us": us_k, "jax_us": us_j, "max_err": err})
+            # paged cell: same logical cache behind a scrambled block table
+            ncols = S // pg
+            pool_rows = b * ncols + b          # data pages + scratch pages
+            perm = jax.random.permutation(kl, b * ncols)
+            bt = perm.reshape(b, ncols).astype(jnp.int32)
+            kp = jnp.zeros((pool_rows, pg, kvh, hd)).at[bt.reshape(-1)].set(
+                k.reshape(b * ncols, pg, kvh, hd))
+            vp = jnp.zeros((pool_rows, pg, kvh, hd)).at[bt.reshape(-1)].set(
+                v.reshape(b * ncols, pg, kvh, hd))
+            pkern = jax.jit(lambda q, kp, vp, bt, l: flash_decode_paged(
+                q, kp, vp, bt, l))
+            perr = float(jnp.max(jnp.abs(pkern(q, kp, vp, bt, kvl)
+                                         - orac(q, k, v, kvl))))
+            us_p = timeit(lambda: jax.block_until_ready(
+                pkern(q, kp, vp, bt, kvl)), n=3)
+            rows.append({"kernel": "flash_decode_paged", "slots": b, "seq": S,
+                         "kernel_us": us_p, "jax_us": us_j, "max_err": perr})
+    return rows
+
+
+def _scatter_agg_row():
+    """Fused aggregation vs the densify→scatter-add chain (D=8 packets)."""
+    D, k, n = 8, 1024, 1 << 18
+    kv, ki = jax.random.split(jax.random.PRNGKey(7))
+    vals = jax.random.normal(kv, (D, k))
+    idx = jnp.stack([jax.random.permutation(kk, n)[:k].astype(jnp.int32)
+                     for kk in jax.random.split(ki, D)])
+    fused = jax.jit(lambda v, i: scatter_aggregate(v, i, n))
+    chain = jax.jit(lambda v, i: jnp.zeros((n,), v.dtype)
+                    .at[i.reshape(-1)].add(v.reshape(-1)))
+    exact = bool(jnp.all(fused(vals, idx) == chain(vals, idx)))
+    us_f = timeit(lambda: jax.block_until_ready(fused(vals, idx)), n=3)
+    us_c = timeit(lambda: jax.block_until_ready(chain(vals, idx)), n=3)
+    emit("kernel_scatter_agg_8x1k", us_f,
+         f"bit_exact={exact};chain_us={us_c:.0f}")
+    return {"kernel": "scatter_agg", "devices": D, "k": k, "n": n,
+            "kernel_us": us_f, "chain_us": us_c, "bit_exact": exact}
 
 
 def main():
@@ -41,6 +109,8 @@ def main():
     emit("kernel_fused_sgdm_1m", us, "mode=interpret(cpu-correctness)")
     rows.append({"kernel": "fused_sgdm", "n": n, "us": us,
                  "mode": "interpret(cpu-correctness)"})
+    rows.extend(_flash_decode_rows())
+    rows.append(_scatter_agg_row())
     write_json_artifact("artifacts/perf/kernels.json", {"rows": rows})
 
 

@@ -134,6 +134,18 @@ TOLERANCES = {
     "prefill_max_cache_err": dict(
         tol_frac=0.0, abs_tol=1e-3, direction="lower",
         note="fused and loop prefill must fill identical caches"),
+    "kernel_decode_max_err": dict(
+        tol_frac=0.0, abs_tol=1e-3, direction="lower",
+        note="pallas flash-decode vs jnp decode_attention, worst case over "
+             "contiguous mixed-age and paged block-table cells (interpret)"),
+    "kernel_prefill_flash_max_err": dict(
+        tol_frac=0.0, abs_tol=1e-3, direction="lower",
+        note="pallas flash-attention prefill vs the chunked jax path, worst "
+             "case over causal and SWA kinds with a q_offset chunk"),
+    "kernel_scatter_agg_max_err": dict(
+        tol_frac=0.0, abs_tol=0.0, direction="lower",
+        note="fused scatter_aggregate vs densify→scatter-add with "
+             "cross-device duplicate indices: pinned bit-exact (0.0)"),
 }
 
 
@@ -343,13 +355,72 @@ def collect_prefill(profile_dir=None, prompt_len=64, reps=3):
     }
 
 
+def collect_kernels():
+    """Pallas hot-path kernels vs their jnp oracles (interpret mode on CPU:
+    deterministic correctness numbers, not wall-clock)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.flash_decode import flash_decode, flash_decode_paged
+    from repro.kernels.scatter_agg import scatter_aggregate
+    from repro.models.attention import chunked_attention, decode_attention
+
+    key = jax.random.PRNGKey(GATE_SEED)
+    ks = jax.random.split(key, 8)
+    b, S, h, kvh, hd = 4, 32, 4, 2, 16
+    q = jax.random.normal(ks[0], (b, 1, h, hd))
+    k = jax.random.normal(ks[1], (b, S, kvh, hd))
+    v = jax.random.normal(ks[2], (b, S, kvh, hd))
+    kvl = jnp.array([1, 32, 13, 7], jnp.int32)
+    ref = decode_attention(q, k, v, kvl)
+    err_c = float(jnp.max(jnp.abs(
+        flash_decode(q, k, v, kvl, bk=8, interpret=True) - ref)))
+    pg, ncols = 8, 4
+    bt = jax.random.permutation(ks[3], b * ncols).reshape(b, ncols)
+    bt = bt.astype(jnp.int32)
+    kp = jnp.zeros((b * ncols, pg, kvh, hd)).at[bt.reshape(-1)].set(
+        k.reshape(b * ncols, pg, kvh, hd))
+    vp = jnp.zeros((b * ncols, pg, kvh, hd)).at[bt.reshape(-1)].set(
+        v.reshape(b * ncols, pg, kvh, hd))
+    err_p = float(jnp.max(jnp.abs(
+        flash_decode_paged(q, kp, vp, bt, kvl, interpret=True) - ref)))
+
+    sq = 16
+    qq = jax.random.normal(ks[4], (b, sq, h, hd))
+    err_f = 0.0
+    for kind, window, off in (("causal", 0, 0), ("swa", 8, 0),
+                              ("causal", 0, 16)):
+        ref_a = chunked_attention(qq, k, v, kind=kind, window=window,
+                                  q_offset=off, chunk_q=8, chunk_k=8)
+        out_a = chunked_attention(qq, k, v, kind=kind, window=window,
+                                  q_offset=off, backend="pallas",
+                                  interpret=True)
+        err_f = max(err_f, float(jnp.max(jnp.abs(out_a - ref_a))))
+
+    D, kk, n = 4, 16, 512
+    vals = jax.random.normal(ks[5], (D, kk))
+    idx = jnp.stack([jax.random.permutation(kx, n)[:kk].astype(jnp.int32)
+                     for kx in jax.random.split(ks[6], D)])
+    idx = idx.at[2, :5].set(idx[0, :5])      # cross-device duplicates
+    ref_g = (jnp.zeros((n,), vals.dtype)
+             .at[idx.reshape(-1)].add(vals.reshape(-1)))
+    err_s = float(jnp.max(jnp.abs(
+        scatter_aggregate(vals, idx, n, interpret=True) - ref_g)))
+    return {
+        "kernel_decode_max_err": max(err_c, err_p),
+        "kernel_prefill_flash_max_err": err_f,
+        "kernel_scatter_agg_max_err": err_s,
+    }
+
+
 def collect(profile_dir=None):
     metrics = {}
     for name, fn in (("training", lambda: collect_training(profile_dir)),
                      ("noniid", collect_noniid),
                      ("serving", collect_serving),
                      ("serving_scale", collect_serving_scale),
-                     ("prefill", lambda: collect_prefill(profile_dir))):
+                     ("prefill", lambda: collect_prefill(profile_dir)),
+                     ("kernels", collect_kernels)):
         t0 = time.perf_counter()
         metrics.update(fn())
         print(f"# collected {name} in {time.perf_counter() - t0:.1f}s")

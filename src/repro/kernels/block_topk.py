@@ -44,18 +44,14 @@ def _block_topk_kernel(g_ref, out_ref, cnt_ref, *, k: int):
     g = g_ref[...]
     mag = jnp.abs(g.astype(jnp.float32))
     tau = _bisect_threshold(mag, k)
-    keep = mag >= tau
+    # tau == 0 iff the block is all-zero (bisection can't raise hi above 0);
+    # without the mag > 0 guard such blocks would report block_size survivors.
+    keep = (mag >= tau) & (mag > 0)
     out_ref[...] = jnp.where(keep, g, jnp.zeros_like(g))
     cnt_ref[...] = jnp.sum(keep.astype(jnp.int32), axis=-1, keepdims=True)
 
 
-@functools.partial(jax.jit, static_argnames=("k", "interpret"))
-def block_topk(g2d: jnp.ndarray, k: int, interpret: bool = True):
-    """g2d (n_blocks, block_size) -> (sparsified g2d, counts (n_blocks, 1)).
-
-    ``k`` survivors per block.  ``interpret=True`` executes the kernel body in
-    Python on CPU (validation mode); on TPU pass interpret=False.
-    """
+def _block_topk_call(g2d: jnp.ndarray, k: int, interpret: bool):
     n_blocks, block = g2d.shape
     tile = min(TILE_BLOCKS, n_blocks)
     assert n_blocks % tile == 0, (n_blocks, tile)
@@ -70,6 +66,38 @@ def block_topk(g2d: jnp.ndarray, k: int, interpret: bool = True):
                    jax.ShapeDtypeStruct((n_blocks, 1), jnp.int32)],
         interpret=interpret,
     )(g2d)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def _block_topk_vjp(g2d, k: int, interpret: bool):
+    return _block_topk_call(g2d, k, interpret)
+
+
+def _block_topk_fwd(g2d, k: int, interpret: bool):
+    out, cnt = _block_topk_call(g2d, k, interpret)
+    # survivors never carry value 0 (the mag > 0 guard), so out != 0 IS the
+    # keep mask — no need to re-run the bisection in the backward pass.
+    return (out, cnt), out != 0
+
+
+def _block_topk_bwd(k: int, interpret: bool, keep, cts):
+    d_out, _ = cts       # count cotangent is float0 (int output) — dropped
+    return (jnp.where(keep, d_out, jnp.zeros_like(d_out)),)
+
+
+_block_topk_vjp.defvjp(_block_topk_fwd, _block_topk_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def block_topk(g2d: jnp.ndarray, k: int, interpret: bool = True):
+    """g2d (n_blocks, block_size) -> (sparsified g2d, counts (n_blocks, 1)).
+
+    ``k`` survivors per block.  ``interpret=True`` executes the kernel body in
+    Python on CPU (validation mode); on TPU pass interpret=False.
+    Differentiable: the VJP is a straight-through mask over survivors, so the
+    compressed DDP program stays differentiable end-to-end.
+    """
+    return _block_topk_vjp(g2d, k, interpret)
 
 
 # ---------------------------------------------------------------------------

@@ -26,19 +26,19 @@ DEFAULT_BK = 128
 
 
 def _flash_fwd_kernel(q_ref, k_ref, v_ref, o_ref, *, kind: str, window: int,
-                      bk: int, sk: int, scale: float):
+                      bk: int, sk: int, scale: float, q_offset: int):
     """q_ref (1, bq, hd); k_ref/v_ref (1, sk, hd); o_ref (1, bq, hd)."""
     _, bq, hd = q_ref.shape
     qi = pl.program_id(1)
     q = q_ref[0].astype(jnp.float32) * scale
-    qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, 1), 0)
+    qpos = (q_offset + qi * bq
+            + jax.lax.broadcasted_iota(jnp.int32, (bq, 1), 0))
 
     def body(s_idx, carry):
         m, l, acc = carry
-        k = pl.load(k_ref, (0, pl.dslice(s_idx * bk, bk), slice(None))
-                    ).astype(jnp.float32)
-        v = pl.load(v_ref, (0, pl.dslice(s_idx * bk, bk), slice(None))
-                    ).astype(jnp.float32)
+        blk = (pl.dslice(0, 1), pl.dslice(s_idx * bk, bk), slice(None))
+        k = pl.load(k_ref, blk).reshape(bk, hd).astype(jnp.float32)
+        v = pl.load(v_ref, blk).reshape(bk, hd).astype(jnp.float32)
         s = q @ k.T                                     # (bq, bk)
         kpos = s_idx * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
         if kind in ("causal", "swa"):
@@ -63,14 +63,16 @@ def _flash_fwd_kernel(q_ref, k_ref, v_ref, o_ref, *, kind: str, window: int,
 
 
 @functools.partial(jax.jit, static_argnames=("kind", "window", "bq", "bk",
-                                             "interpret"))
+                                             "q_offset", "interpret"))
 def flash_attention_fwd(q, k, v, *, kind: str = "causal", window: int = 0,
                         bq: int = DEFAULT_BQ, bk: int = DEFAULT_BK,
-                        interpret: bool = True):
+                        q_offset: int = 0, interpret: bool = True):
     """q (bh, sq, hd); k/v (bh, sk, hd) — heads pre-flattened/pre-repeated.
 
     Returns (bh, sq, hd).  bq/bk are the VMEM tile sizes (128-aligned for the
-    MXU); KV streams through VMEM one (bk, hd) tile at a time.
+    MXU); KV streams through VMEM one (bk, hd) tile at a time.  ``q_offset``
+    shifts query positions for chunked prefill: query row i sits at absolute
+    position ``q_offset + i`` relative to the sk keys (static, per-chunk).
     """
     bh, sq, hd = q.shape
     _, sk, _ = k.shape
@@ -79,7 +81,8 @@ def flash_attention_fwd(q, k, v, *, kind: str = "causal", window: int = 0,
     assert sq % bq == 0 and sk % bk == 0, (sq, bq, sk, bk)
     grid = (bh, sq // bq)
     kernel = functools.partial(_flash_fwd_kernel, kind=kind, window=window,
-                               bk=bk, sk=sk, scale=hd ** -0.5)
+                               bk=bk, sk=sk, scale=hd ** -0.5,
+                               q_offset=int(q_offset))
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -94,7 +97,7 @@ def flash_attention_fwd(q, k, v, *, kind: str = "causal", window: int = 0,
 
 def flash_attention(q, k, v, *, kind: str = "causal", window: int = 0,
                     bq: int = DEFAULT_BQ, bk: int = DEFAULT_BK,
-                    interpret: bool = True):
+                    q_offset: int = 0, interpret: bool = True):
     """Convenience GQA wrapper: q (b, sq, h, hd), k/v (b, sk, kv, hd)."""
     b, sq, h, hd = q.shape
     _, sk, kvh, _ = k.shape
@@ -103,5 +106,5 @@ def flash_attention(q, k, v, *, kind: str = "causal", window: int = 0,
     kf = jnp.repeat(k.transpose(0, 2, 1, 3), g, axis=1).reshape(b * h, sk, hd)
     vf = jnp.repeat(v.transpose(0, 2, 1, 3), g, axis=1).reshape(b * h, sk, hd)
     o = flash_attention_fwd(qf, kf, vf, kind=kind, window=window, bq=bq,
-                            bk=bk, interpret=interpret)
+                            bk=bk, q_offset=q_offset, interpret=interpret)
     return o.reshape(b, h, sq, hd).transpose(0, 2, 1, 3)

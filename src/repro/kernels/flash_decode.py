@@ -1,0 +1,193 @@
+"""Pallas TPU kernel family: single-token flash-decode over slot caches.
+
+After the PR-8 serving refactor, single-token decode over the continuous-
+batching caches is the serving hot path — and it ran XLA-default attention
+(`models/attention.py::decode_attention`) over a gathered contiguous view.
+This kernel family reads the repo's cache layouts *directly*:
+
+* **contiguous** (`flash_decode`) — fixed-slot `(b, S, kv, hd)` K/V rows and
+  SWA ring buffers share one kernel: the ring's scrambled storage order is
+  harmless (RoPE is applied at write time, so decode attention is a pure
+  set-reduction over valid entries) and per-slot `kv_len` masking handles
+  both the mixed-age fixed case (`kv_len = pos+1`) and the wrapped ring
+  (`kv_len = S` once `pos >= S`).
+* **paged** (`flash_decode_paged`) — page pools `(rows, page, kv, hd)`
+  behind per-slot int32 block tables: the kernel resolves `pool[bt[slot,
+  page]]` *inside* the streaming loop, so the materialised contiguous
+  gather (`pool[bt].reshape(...)` — a full cache copy per decode step) in
+  `models/decode.py::_block_decode` disappears from the paged hot path.
+  Scratch-page-evicted slots ride the batch safely: their reads are
+  kv_len-masked exactly like the jnp path.
+
+Grid covers (slot, kv-head); each program streams K/V blocks with an
+online-softmax `(m, l, acc)` carry — the blockwise structure of
+`kernels/flash_attention.py` specialised to one query token per slot (the
+(g, hd) grouped-query tile attends against (bk, hd) key blocks).  Softmax
+statistics accumulate in fp32 regardless of cache dtype, matching
+`decode_attention`'s `preferred_element_type` discipline, so kernel-vs-
+oracle equality holds to float tolerance (tests/test_kernels_decode.py).
+
+Dispatched from `models/decode.py` behind ``RunCtx.decode_backend =
+"pallas"`` (interpret mode on CPU for validation, compiled on TPU —
+``RunCtx.kernel_interpret`` overrides the autodetect), so `serve.SlotRunner`
+and the multi-lane `Scheduler` ride the kernels transparently.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+DEFAULT_BK = 128
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _online_update(carry, s, v):
+    """One online-softmax step: s (g, bk) fp32 scores, v (bk, hd) fp32."""
+    m, l, acc = carry
+    m_b = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m_b)
+    l_b = jnp.sum(p, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m, m_b)
+    c1 = jnp.exp(m - m_new)
+    c2 = jnp.exp(m_b - m_new)        # 0 for an all-masked block: no leakage
+    return m_new, l * c1 + l_b * c2, acc * c1 + (p @ v) * c2
+
+
+def _finish(o_ref, carry):
+    _, l, acc = carry
+    o_ref[0, 0] = (acc / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, kvl_ref, o_ref, *, bk: int, nk: int,
+                   scale: float):
+    """Contiguous caches. q_ref (1, 1, g, hd); k/v_ref (1, S, 1, hd);
+    kvl_ref whole (b,) int32; o_ref (1, 1, g, hd).  Grid (slot, kv-head)."""
+    g, hd = q_ref.shape[2], q_ref.shape[3]
+    slot = pl.program_id(0)
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # (g, hd)
+    kv_len = kvl_ref[slot]
+
+    def body(i, carry):
+        blk = (pl.dslice(0, 1), pl.dslice(i * bk, bk), pl.dslice(0, 1),
+               slice(None))
+        k = pl.load(k_ref, blk).reshape(bk, hd).astype(jnp.float32)
+        v = pl.load(v_ref, blk).reshape(bk, hd).astype(jnp.float32)
+        s = q @ k.T                                      # (g, bk)
+        kpos = i * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+        s = jnp.where(kpos < kv_len, s, NEG_INF)
+        return _online_update(carry, s, v)
+
+    m0 = jnp.full((g, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((g, 1), jnp.float32)
+    a0 = jnp.zeros((g, hd), jnp.float32)
+    _finish(o_ref, jax.lax.fori_loop(0, nk, body, (m0, l0, a0)))
+
+
+def _paged_decode_kernel(q_ref, kp_ref, vp_ref, bt_ref, kvl_ref, o_ref, *,
+                         pg: int, ncols: int, scale: float):
+    """Paged pools. q_ref (1, 1, g, hd); kp/vp_ref whole (rows, pg, kvh, hd);
+    bt_ref whole (b, ncols) int32; kvl_ref whole (b,) int32.  Each streamed
+    block is one page, resolved through the slot's block-table row."""
+    g, hd = q_ref.shape[2], q_ref.shape[3]
+    slot = pl.program_id(0)
+    head = pl.program_id(1)
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # (g, hd)
+    kv_len = kvl_ref[slot]
+
+    def body(c, carry):
+        row = bt_ref[slot, c]                            # int32 pool row
+        k = pl.load(kp_ref, (pl.dslice(row, 1), slice(None), head,
+                             slice(None))).reshape(pg, hd).astype(jnp.float32)
+        v = pl.load(vp_ref, (pl.dslice(row, 1), slice(None), head,
+                             slice(None))).reshape(pg, hd).astype(jnp.float32)
+        s = q @ k.T                                      # (g, pg)
+        kpos = c * pg + jax.lax.broadcasted_iota(jnp.int32, (1, pg), 1)
+        s = jnp.where(kpos < kv_len, s, NEG_INF)
+        return _online_update(carry, s, v)
+
+    m0 = jnp.full((g, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((g, 1), jnp.float32)
+    a0 = jnp.zeros((g, hd), jnp.float32)
+    _finish(o_ref, jax.lax.fori_loop(0, ncols, body, (m0, l0, a0)))
+
+
+def _norm_kv_len(kv_len, b: int):
+    """Scalar (lockstep / cross-attn) or (b,) per-slot lengths -> (b,) i32."""
+    kvl = jnp.reshape(jnp.asarray(kv_len, jnp.int32), (-1,))
+    return jnp.broadcast_to(kvl, (b,))
+
+
+@functools.partial(jax.jit, static_argnames=("bk", "interpret"))
+def flash_decode(q, k_cache, v_cache, kv_len, *, bk: int = DEFAULT_BK,
+                 interpret: bool = None):
+    """Single-token decode attention over a contiguous slot cache.
+
+    q (b, 1, h, hd); k/v_cache (b, S, kv, hd) — fixed-slot rows or SWA ring
+    buffers (storage order is irrelevant post-RoPE); kv_len scalar or (b,)
+    per-slot valid lengths.  Returns (b, 1, h, hd), matching
+    ``models.attention.decode_attention`` to float tolerance.
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    b, _, h, hd = q.shape
+    _, S, kvh, _ = k_cache.shape
+    g = h // kvh
+    bk = min(bk, S)
+    if S % bk:
+        bk = math.gcd(S, bk)
+    qh = q.reshape(b, kvh, g, hd)
+    kernel = functools.partial(_decode_kernel, bk=bk, nk=S // bk,
+                               scale=hd ** -0.5)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, kvh),
+        in_specs=[pl.BlockSpec((1, 1, g, hd), lambda s, k_: (s, k_, 0, 0)),
+                  pl.BlockSpec((1, S, 1, hd), lambda s, k_: (s, 0, k_, 0)),
+                  pl.BlockSpec((1, S, 1, hd), lambda s, k_: (s, 0, k_, 0)),
+                  pl.BlockSpec(memory_space=pl.ANY)],
+        out_specs=pl.BlockSpec((1, 1, g, hd), lambda s, k_: (s, k_, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, hd), q.dtype),
+        interpret=interpret,
+    )(qh, k_cache, v_cache, _norm_kv_len(kv_len, b))
+    return out.reshape(b, 1, h, hd)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def flash_decode_paged(q, k_pool, v_pool, bt, kv_len, *,
+                       interpret: bool = None):
+    """Single-token decode attention over a paged pool via block-table
+    indirection — no materialised contiguous gather.
+
+    q (b, 1, h, hd); k/v_pool (rows, page, kv, hd); bt (b, ncols) int32
+    mapping each slot's logical pages to pool rows; kv_len scalar or (b,).
+    Equivalent to gathering ``pool[bt].reshape(b, ncols*page, kv, hd)`` and
+    calling ``decode_attention`` — to float tolerance, minus the copy.
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    b, _, h, hd = q.shape
+    rows, pg, kvh, _ = k_pool.shape
+    ncols = bt.shape[-1]
+    g = h // kvh
+    qh = q.reshape(b, kvh, g, hd)
+    kernel = functools.partial(_paged_decode_kernel, pg=pg, ncols=ncols,
+                               scale=hd ** -0.5)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, kvh),
+        in_specs=[pl.BlockSpec((1, 1, g, hd), lambda s, k_: (s, k_, 0, 0)),
+                  pl.BlockSpec(memory_space=pl.ANY),
+                  pl.BlockSpec(memory_space=pl.ANY),
+                  pl.BlockSpec(memory_space=pl.ANY),
+                  pl.BlockSpec(memory_space=pl.ANY)],
+        out_specs=pl.BlockSpec((1, 1, g, hd), lambda s, k_: (s, k_, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, hd), q.dtype),
+        interpret=interpret,
+    )(qh, k_pool, v_pool, bt.astype(jnp.int32), _norm_kv_len(kv_len, b))
+    return out.reshape(b, 1, h, hd)

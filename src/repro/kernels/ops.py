@@ -52,7 +52,11 @@ def block_topk_counts(flat: jnp.ndarray, cr: float,
     g2d, n = _to_blocks(flat, block_size)
     k = max(1, int(cr * block_size))
     out, cnt = bt.block_topk(g2d, k, interpret=interpret)
-    return out.reshape(-1)[:n], cnt.reshape(-1)
+    # _to_blocks pads with zero rows (element pad + TILE_BLOCKS row pad);
+    # only the first ceil(n / block_size) rows are real data, so trim the
+    # counts to keep CSR wire-cost accounting honest.
+    rows = -(-n // block_size)
+    return out.reshape(-1)[:n], cnt.reshape(-1)[:rows]
 
 
 @functools.partial(jax.jit, static_argnames=("momentum", "weight_decay",

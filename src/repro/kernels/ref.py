@@ -11,7 +11,7 @@ def block_topk_ref(g2d: jnp.ndarray, k: int):
     """Oracle for kernels.block_topk: identical bisection semantics."""
     mag = jnp.abs(g2d.astype(jnp.float32))
     tau = _bisect_threshold(mag, k)
-    keep = mag >= tau
+    keep = (mag >= tau) & (mag > 0)   # all-zero block -> 0 survivors
     out = jnp.where(keep, g2d, jnp.zeros_like(g2d))
     cnt = jnp.sum(keep.astype(jnp.int32), axis=-1, keepdims=True)
     return out, cnt

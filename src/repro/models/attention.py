@@ -243,22 +243,38 @@ _flash.defvjp(_flash_fwd_rule, _flash_bwd_rule)
 # public entry points
 
 
+def _kernel_interpret(interpret: Optional[bool]) -> bool:
+    return jax.default_backend() != "tpu" if interpret is None else interpret
+
+
 def chunked_attention(q, k, v, *, kind: str = "causal", window: int = 0,
                       q_offset=0, chunk_q: int = 512, chunk_k: int = 512,
-                      static_offset: bool = True):
+                      static_offset: bool = True, backend: str = "jax",
+                      interpret: Optional[bool] = None):
     """q (b, sq, h, hd); k/v (b, sk, kv, hd) -> (b, sq, h, hd).
 
     ``q_offset``: global position of q[0] relative to k[0].  Python int (+
     ``static_offset``) enables static skipping of fully-masked KV blocks; a
     traced offset (context parallel) falls back to mask-only.
+
+    ``backend="pallas"`` routes the forward through the Pallas flash kernel
+    (``kernels/flash_attention.py``, forward-only — serving prefill).  Traced
+    offsets (context parallel) always take the JAX path; ``interpret`` is
+    the Pallas interpret override (None = autodetect: interpret off-TPU).
     """
     b, sq, h, hd = q.shape
     _, sk, kvh, _ = k.shape
     g = h // kvh
+    import math
+    if backend == "pallas" and static_offset:
+        from repro.kernels.flash_attention import flash_attention
+        return flash_attention(
+            q, k, v, kind=kind, window=window, q_offset=int(q_offset),
+            bq=math.gcd(sq, 128), bk=math.gcd(sk, 128),
+            interpret=_kernel_interpret(interpret))
     qg = q.reshape(b, sq, kvh, g, hd)
     # snap chunks to divisors of the sequence lengths (e.g. whisper's 1536
     # frames with a 1024 default -> gcd 512)
-    import math
     chunk_q = math.gcd(min(chunk_q, sq), sq)
     chunk_k = math.gcd(min(chunk_k, sk), sk)
     assert sq % chunk_q == 0 and sk % chunk_k == 0, (sq, chunk_q, sk, chunk_k)
@@ -297,13 +313,23 @@ def context_parallel_attention(q, k, v, mesh, cp_axis: str, *, kind: str,
 
 
 def decode_attention(q, k_cache, v_cache, kv_len, *, kind: str = "causal",
-                     window: int = 0):
+                     window: int = 0, backend: str = "jax",
+                     interpret: Optional[bool] = None):
     """Single-token attention. q (b, 1, h, hd); caches (b, S, kv, hd).
 
     ``kv_len`` is a scalar (whole-batch cache length) or a (b,) vector of
     per-slot lengths — continuous batching decodes requests of mixed age in
     one step, each slot masking its own valid prefix.
+
+    ``backend="pallas"`` routes through ``kernels/flash_decode.py`` (grid
+    over slot x kv-head, online-softmax KV streaming); this path is the
+    serving decode oracle-match, valid for fixed-slot and ring caches alike
+    (paged pools dispatch directly to ``flash_decode_paged`` upstream).
     """
+    if backend == "pallas":
+        from repro.kernels.flash_decode import flash_decode
+        return flash_decode(q, k_cache, v_cache, kv_len,
+                            interpret=_kernel_interpret(interpret))
     b, _, h, hd = q.shape
     _, S, kvh, _ = k_cache.shape
     g = h // kvh

@@ -511,10 +511,19 @@ def _block_decode(bp, x, cl, cfg: ModelConfig, ctx: RunCtx, sig, kind: str,
             cl["k"], cl["v"] = jax.lax.optimization_barrier((
                 cl["k"].at[page, off].set(k[:, 0]),
                 cl["v"].at[page, off].set(v[:, 0])))
-            kvh, hd = cl["k"].shape[-2:]
-            k_view = cl["k"][cl["bt"]].reshape(b, S, kvh, hd)
-            v_view = cl["v"][cl["bt"]].reshape(b, S, kvh, hd)
-            o = decode_attention(q, k_view, v_view, jnp.minimum(pos + 1, S))
+            if ctx.decode_backend == "pallas":
+                # block-table indirection inside the kernel: no materialised
+                # contiguous gather of the pools on the decode hot path
+                from repro.kernels.flash_decode import flash_decode_paged
+                o = flash_decode_paged(
+                    q, cl["k"], cl["v"], cl["bt"], jnp.minimum(pos + 1, S),
+                    interpret=ctx.kernel_interpret)
+            else:
+                kvh, hd = cl["k"].shape[-2:]
+                k_view = cl["k"][cl["bt"]].reshape(b, S, kvh, hd)
+                v_view = cl["v"][cl["bt"]].reshape(b, S, kvh, hd)
+                o = decode_attention(q, k_view, v_view,
+                                     jnp.minimum(pos + 1, S))
             x = x + L.out_proj(bp["attn"], o)
         else:
             S = cl["k"].shape[1]
@@ -535,7 +544,9 @@ def _block_decode(bp, x, cl, cfg: ModelConfig, ctx: RunCtx, sig, kind: str,
                     jax.lax.dynamic_update_slice_in_dim(cl["v"], v, slot,
                                                         axis=1)))
             kv_len = jnp.minimum(pos + 1, S)
-            o = decode_attention(q, cl["k"], cl["v"], kv_len)
+            o = decode_attention(q, cl["k"], cl["v"], kv_len,
+                                 backend=ctx.decode_backend,
+                                 interpret=ctx.kernel_interpret)
             x = x + L.out_proj(bp["attn"], o)
     elif knd == RECURRENT:
         y, hh, conv = rglru_lib.rglru_decode_step(bp["rglru"], h, cl["h"],
@@ -555,7 +566,9 @@ def _block_decode(bp, x, cl, cfg: ModelConfig, ctx: RunCtx, sig, kind: str,
     if "ck" in cl:  # whisper cross-attention (encoder K/V precomputed)
         hc = _norm(bp["norm_cross"], x, cfg)
         qc, _, _ = L.qkv_proj(bp["cross"], hc, cfg)
-        oc = decode_attention(qc, cl["ck"], cl["cv"], cl["ck"].shape[1])
+        oc = decode_attention(qc, cl["ck"], cl["cv"], cl["ck"].shape[1],
+                              backend=ctx.decode_backend,
+                              interpret=ctx.kernel_interpret)
         x = x + L.out_proj(bp["cross"], oc)
     if ffn != "none":
         h2 = _norm(bp["norm2"], x, cfg)
@@ -665,7 +678,9 @@ def _block_prefill(bp, x, cl, cfg: ModelConfig, ctx: RunCtx, sig, kind: str,
         # constrains what later decode steps can still see); mask follows the
         # *effective* kind — a long-context variant runs full layers as SWA
         o = chunked_attention(q, k, v, kind=_PREFILL_MASK[kind], window=window,
-                              chunk_q=ctx.chunk_q, chunk_k=ctx.chunk_k)
+                              chunk_q=ctx.chunk_q, chunk_k=ctx.chunk_k,
+                              backend=ctx.prefill_backend,
+                              interpret=ctx.kernel_interpret)
         x = x + L.out_proj(bp["attn"], o)
     elif knd == RECURRENT:
         y, (hh, conv) = rglru_lib.rglru_block(bp["rglru"], h, return_state=True)
@@ -687,7 +702,9 @@ def _block_prefill(bp, x, cl, cfg: ModelConfig, ctx: RunCtx, sig, kind: str,
         hc = _norm(bp["norm_cross"], x, cfg)
         qc, _, _ = L.qkv_proj(bp["cross"], hc, cfg)
         oc = chunked_attention(qc, cl["ck"], cl["cv"], kind="bidir", window=0,
-                               chunk_q=qc.shape[1], chunk_k=ctx.chunk_k)
+                               chunk_q=qc.shape[1], chunk_k=ctx.chunk_k,
+                               backend=ctx.prefill_backend,
+                               interpret=ctx.kernel_interpret)
         x = x + L.out_proj(bp["cross"], oc)
     if ffn != "none":
         h2 = _norm(bp["norm2"], x, cfg)
@@ -867,7 +884,9 @@ class ChunkedPrefill:
             self._carry[li] = {"k": k_all, "v": v_all}
             o = chunked_attention(q, k_all, v_all, kind=_PREFILL_MASK[kind],
                                   window=window, q_offset=lo,
-                                  chunk_q=ctx.chunk_q, chunk_k=ctx.chunk_k)
+                                  chunk_q=ctx.chunk_q, chunk_k=ctx.chunk_k,
+                                  backend=ctx.prefill_backend,
+                                  interpret=ctx.kernel_interpret)
             x = x + L.out_proj(bp["attn"], o)
         elif knd == RECURRENT:
             y, (hh, conv) = rglru_lib.rglru_block(
@@ -893,7 +912,9 @@ class ChunkedPrefill:
             qc, _, _ = L.qkv_proj(bp["cross"], hc, cfg)
             oc = chunked_attention(qc, cl0["ck"], cl0["cv"], kind="bidir",
                                    window=0, chunk_q=qc.shape[1],
-                                   chunk_k=ctx.chunk_k)
+                                   chunk_k=ctx.chunk_k,
+                                   backend=ctx.prefill_backend,
+                                   interpret=ctx.kernel_interpret)
             x = x + L.out_proj(bp["cross"], oc)
         if ffn != "none":
             h2 = _norm(bp["norm2"], x, cfg)

@@ -50,6 +50,12 @@ class RunCtx:
     param_dtype: Any = jnp.float32
     compute_dtype: Any = jnp.float32
     seq_sharded: bool = False       # context-parallel activations (b, s@tp, d)
+    # Pallas hot-path dispatch (DESIGN.md §15): "jax" = XLA-default paths,
+    # "pallas" = flash_decode / flash_attention kernels.  kernel_interpret
+    # None = autodetect (interpret off-TPU, compiled on TPU).
+    decode_backend: str = "jax"
+    prefill_backend: str = "jax"
+    kernel_interpret: Any = None
 
     def constrain(self, x, spec_axes: Tuple[Any, ...]):
         """with_sharding_constraint, dropping axes that don't divide.
