@@ -117,6 +117,19 @@ TOLERANCES = {
         note="controller goodput / best static (chunk, priority, replicas) "
              "grid point: near 1 means the climb finds the grid optimum "
              "unprompted, > 1 means it beats every static setting"),
+    "serve_prefix_hit_rate": dict(
+        tol_frac=0.05, direction="higher",
+        note="prefix-index hit rate on the Zipf shared-prefix trace "
+             "(deterministic sim): fraction of admissions that matched at "
+             "least one full cached page"),
+    "serve_shared_goodput_win_x": dict(
+        tol_frac=0.05, direction="higher",
+        note="sharing-on / sharing-off deadline-met goodput at equal "
+             "num_pages on the Zipf trace: the prefix-sharing headline win"),
+    "serve_pages_saved_frac": dict(
+        tol_frac=0.05, direction="higher",
+        note="fraction of requested KV pages served from shared prefixes "
+             "instead of fresh allocations (admission accounting pin)"),
     "noniid_strict_advantage_x": dict(
         tol_frac=0.05, direction="higher",
         note="capped async/semi-sync time-to-global-eval-target ratio at "
@@ -284,6 +297,11 @@ def collect_serving_scale():
         breqs, horizon_s=8.0, controller=ctrl,
         control_every_s=1.0, window_s=1.0)
     assert cs["conservation_ok"], "controller run lost a request"
+
+    # prefix-sharing cell: Zipf shared-template trace, sharing on vs off at
+    # equal pool size (pure sim through PrefixSimRunner's refcounted pool)
+    from benchmarks.serving_scale import run_shared_prefix_cell
+    _, _, win = run_shared_prefix_cell()
     return {
         "serve_sched_chunked_goodput_tok_s": chunked["goodput_tok_s"],
         "serve_sched_chunk_win_x": (chunked["goodput_tok_s"]
@@ -294,6 +312,9 @@ def collect_serving_scale():
                                   / grid[(32, "prefill_first", 1)]),
         "serve_ctrl_goodput_tok_s": cs["goodput_tok_s"],
         "serve_ctrl_vs_static_frac": cs["goodput_tok_s"] / best_static,
+        "serve_prefix_hit_rate": win["prefix_hit_rate"],
+        "serve_shared_goodput_win_x": win["shared_goodput_win_x"],
+        "serve_pages_saved_frac": win["pages_saved_frac"],
     }
 
 

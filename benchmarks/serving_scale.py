@@ -1,6 +1,6 @@
 """Planet-scale serving benchmark: chunked prefill, runner fan-out, control.
 
-Four cells, one artifact (``artifacts/serve/serving_scale.json``):
+Five cells, one artifact (``artifacts/serve/serving_scale.json``):
 
 1. **Chunked-interleaved vs whole-prompt** — on the S2 near-overload stream
    with *mixed* prompt lengths (16/64/256), sweep the scheduler's
@@ -19,18 +19,24 @@ Four cells, one artifact (``artifacts/serve/serving_scale.json``):
    jitted ``SlotRunner`` with a paged KV cache and real ``ChunkedPrefill``
    jobs: the integration cell proving the sim scheduler and the model-level
    paging agree (conservation + all terminals real).
+5. **Prefix sharing** — a Zipf shared-template trace (few hot system
+   prompts) through ``PrefixSimRunner`` lanes at equal ``num_pages``,
+   sharing on vs off: refcounted prefix pages + prefill-skip must buy
+   deadline-met goodput and TTFT p95 where the page pool is the binding
+   constraint (perf-gate pinned: ``prefix_hit_rate``,
+   ``shared_goodput_win_x``, ``pages_saved_frac``).
 
-Cells 1-3 run on the synthetic stress cost model (same constants the perf
-gate pins) so the regime is the interesting one on any host; the real-
+Cells 1-3 and 5 run on the synthetic stress cost model (same constants the
+perf gate pins) so the regime is the interesting one on any host; the real-
 runner cell also reports this host's measured base+token prefill fit.
 """
 import argparse
 
 from benchmarks.common import emit, write_json_artifact
 from repro.serve import (BurstyRequestStream, ContinuousBatchingServer,
-                         PRIORITIES, RequestStream, Scheduler,
-                         ServeController, SlotRunner, StepCostModel,
-                         measured_cost_model)
+                         PRIORITIES, PrefixSimRunner, RequestStream,
+                         Scheduler, ServeController, SlotRunner,
+                         StepCostModel, measured_cost_model)
 
 MAX_BATCH = 4
 HORIZON = 8.0
@@ -160,17 +166,79 @@ def bench_real_paged_runner():
             "summary": _row(s)}
 
 
+def shared_prefix_trace(horizon=HORIZON):
+    """The Zipf shared-template near-overload trace (also the perf-gate
+    workload): long prompts whose first 192 tokens are one of 4 templates."""
+    return RequestStream(dist="S2", n_clients=16, prompt_len=256,
+                         max_new_tokens=16, slo_ttft_s=0.5, slo_tpot_s=0.05,
+                         seed=0, n_templates=4, template_prefix_len=192,
+                         template_zipf=1.2).generate(horizon)
+
+
+def run_shared_prefix_cell(horizon=HORIZON):
+    """Sharing on vs off at equal pool size; returns (rows, win metrics).
+
+    Geometry: 256-token prompts + 16 generated = 17 pages of 16 at
+    cache_len 288; the 192-token template prefix is 12 full shareable
+    pages, so a hit admits on 5 new pages instead of 17.  The pool (64
+    pages) binds: sharing-off fits 3 requests, sharing-on ~10 plus the
+    resident template prefixes — admission capacity is the whole game.
+    """
+    cache_len, page, num_pages, mb = 288, 16, 64, 16
+    reqs = shared_prefix_trace(horizon)
+    rows = {}
+    for mode in ("off", "on"):
+        runner = PrefixSimRunner(mb, cache_len, page, num_pages,
+                                 prefix_sharing=(mode == "on"))
+        _, s = Scheduler(mb, COST, runners=[runner], chunk_tokens=32).run(
+            reqs, horizon_s=horizon)
+        rows[mode] = _row(s, mode=mode, completed=s["completed"],
+                          prefix_sharing=s.get("prefix_sharing"))
+    on, off = rows["on"], rows["off"]
+    share = on["prefix_sharing"]
+    win = {"shared_goodput_win_x": (on["goodput_tok_s"]
+                                    / max(off["goodput_tok_s"], 1e-9)),
+           "admitted_win_x": on["completed"] / max(off["completed"], 1),
+           "prefix_hit_rate": share["prefix_hit_rate"],
+           "pages_saved_frac": share["pages_saved_frac"],
+           "prefill_tokens_skipped": share["prefill_tokens_skipped"]}
+    return reqs, rows, win
+
+
+def bench_shared_prefix():
+    """Zipf shared-prefix trace: sharing on vs off at equal ``num_pages``."""
+    reqs, rows, win = run_shared_prefix_cell()
+    on, off = rows["on"], rows["off"]
+    emit("serve_scale_shared_prefix", HORIZON * 1e6,
+         f"goodput_on={on['goodput_tok_s']:.1f};"
+         f"goodput_off={off['goodput_tok_s']:.1f};"
+         f"win={win['shared_goodput_win_x']:.2f}x;"
+         f"hit_rate={win['prefix_hit_rate']:.3f};"
+         f"pages_saved={win['pages_saved_frac']:.3f};"
+         f"cons={on['conservation_ok']}")
+    flag = ("OK" if win["shared_goodput_win_x"] >= 1.2
+            or win["admitted_win_x"] >= 1.3 else "REGRESSION")
+    print(f"# prefix sharing: {on['goodput_tok_s']:.1f} vs "
+          f"{off['goodput_tok_s']:.1f} tok/s "
+          f"({win['shared_goodput_win_x']:.2f}x), ttft_p95 "
+          f"{on['ttft_p95_s']:.3f} vs {off['ttft_p95_s']:.3f}, "
+          f"hit_rate {win['prefix_hit_rate']:.3f} -> {flag}")
+    return {"n_requests": len(reqs), "rows": list(rows.values()), **win}
+
+
 def main():
     argparse.ArgumentParser(description=__doc__).parse_args()
     chunk = bench_chunk_grid()
     fanout = bench_fanout_and_control()
     real = bench_real_paged_runner()
+    shared = bench_shared_prefix()
     write_json_artifact("artifacts/serve/serving_scale.json", {
         "max_batch": MAX_BATCH, "horizon_s": HORIZON,
         "cost_model": {"decode_step_s": COST.decode_step_s,
                        "prefill_token_s": COST.prefill_token_s,
                        "prefill_base_s": COST.prefill_base_s},
         "chunk_grid": chunk, "fanout": fanout, "real_runner": real,
+        "shared_prefix": shared,
     })
 
 

@@ -57,7 +57,6 @@ works for any head count; softmax statistics reduce across shards via GSPMD
 from __future__ import annotations
 
 import math
-from collections import deque
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -65,6 +64,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import (ATTN_FULL, ATTN_LOCAL, ATTN_SWA, MLSTM,
                                 RECURRENT, SLSTM, ModelConfig)
+from repro.models.paging import (PagePool, PrefixIndex,  # noqa: F401
+                                 PrefixMatch, page_keys)
 from repro.models import layers as L
 from repro.models import moe as moe_lib
 from repro.models import rglru as rglru_lib
@@ -163,7 +164,8 @@ def init_slot_cache(cfg: ModelConfig, max_batch: int, cache_len: int,
     return cache
 
 
-def slot_insert(cache, slot, src, src_slot: int = 0, pages=None):
+def slot_insert(cache, slot, src, src_slot: int = 0, pages=None,
+                skip_cols: int = 0):
     """Copy one request's state out of ``src`` into ``cache`` slot ``slot``.
 
     ``src`` is a cache of the same config/cache_len — typically the batch-1
@@ -178,7 +180,8 @@ def slot_insert(cache, slot, src, src_slot: int = 0, pages=None):
     if _is_paged(cache):
         if pages is None:
             raise ValueError("paged cache: slot_insert needs `pages`")
-        return paged_insert(cache, slot, src, pages, src_slot)
+        return paged_insert(cache, slot, src, pages, src_slot,
+                            skip_cols=skip_cols)
     out = dict(cache)
     out["unit"] = jax.tree.map(
         lambda dst, s: dst.at[:, slot].set(s[:, src_slot]),
@@ -268,41 +271,68 @@ def pages_needed(cfg: ModelConfig, cache_len: int, page_size: int,
     return need
 
 
-class PagePool:
-    """Host-side page allocator for :func:`init_paged_cache` caches.
+def prefix_sharing_supported(cfg: ModelConfig, cache_len: int, page_size: int,
+                             pattern: Optional[Sequence[str]] = None
+                             ) -> Optional[int]:
+    """Page token count if this config can share prompt-prefix pages, else
+    None.
 
-    Pure bookkeeping: page ids index rows of every layer's pool array.  The
-    scheduler allocates a request's pages at admission (``pages_needed`` for
-    prompt + max_new_tokens, so the jitted decode step never allocates) and
-    frees them when the request finishes or is evicted.
+    A page is shareable only when its content is a pure function of the
+    prompt prefix *and* its donor never rewrites it: full-attention prompt
+    pages qualify (post-RoPE K/V at absolute positions; decode writes land at
+    ``pos >= prompt_len``, strictly past the prefix pages).  Everything else
+    does not — SWA/local rings cyclically rewrap into their pages during
+    decode (the same reason vLLM disables prefix caching under sliding
+    windows), recurrent/xLSTM state is a whole-prefix functional that lives
+    slot-resident rather than in pages, and whisper cross-K/V keys on audio,
+    not prompt tokens.  So: every effective layer must be ATTN_FULL and the
+    stack encoder-free, which also makes the page geometry uniform across
+    layers (one block-table row prefix describes every layer).
     """
-
-    def __init__(self, num_pages: int):
-        self.num_pages = int(num_pages)
-        self._free = deque(range(self.num_pages))
-        self._free_set = set(self._free)
-
-    @property
-    def available(self) -> int:
-        return len(self._free)
-
-    def alloc(self, n: int) -> Optional[List[int]]:
-        """``n`` page ids, or None when the pool cannot satisfy the request
-        (the caller queues the admission instead of over-subscribing)."""
-        if n > len(self._free):
+    pattern = tuple(pattern) if pattern is not None else cfg.pattern
+    if cfg.encoder_layers > 0:
+        return None
+    for li in range(cfg.num_layers):
+        kind, _ = _effective(cfg, pattern, li)
+        if kind != ATTN_FULL:
             return None
-        pages = [self._free.popleft() for _ in range(n)]
-        self._free_set.difference_update(pages)
-        return pages
+    pg, _ = _layer_page_geometry(cache_len, page_size)
+    return pg
 
-    def free(self, pages: Sequence[int]) -> None:
-        for p in pages:
-            if p in self._free_set:
-                raise ValueError(f"double free of page {p}")
-            if not 0 <= p < self.num_pages:
-                raise ValueError(f"page {p} outside pool")
-            self._free.append(p)
-            self._free_set.add(p)
+
+def gather_prefix_kv(cache, pages: Sequence[int], n_tokens: int):
+    """Read the first ``n_tokens`` of K/V content out of shared ``pages``.
+
+    Returns a per-global-layer list (``ChunkedPrefill`` carry order: unit
+    layer ``li = r * u + j``, then rest) of ``{"k", "v"}`` dicts shaped
+    ``(1, n_tokens, kv, hd)`` — exactly the carry a consumer's chunked
+    prefill would have accumulated had it prefilled those tokens itself.
+    Only valid under :func:`prefix_sharing_supported` (uniform full-attention
+    geometry); the gather off the pools *is* the copy-on-write copy for the
+    partial tail page — the consumer's ``paged_insert`` later writes the
+    gathered content into its own private page.
+    """
+    rows = jnp.asarray([int(p) for p in pages], jnp.int32)
+    out = []
+
+    def gather(cl):
+        if "bt" not in cl:
+            return None
+        pg = cl["k"].shape[-3]
+        kv, hd = cl["k"].shape[-2:]
+        k = cl["k"][rows].reshape(1, len(pages) * pg, kv, hd)
+        v = cl["v"][rows].reshape(1, len(pages) * pg, kv, hd)
+        return {"k": k[:, :n_tokens], "v": v[:, :n_tokens]}
+
+    u = len(cache["unit"])
+    reps = next(iter(cache["unit"].values()))["k"].shape[0] if u else 0
+    for r in range(reps):
+        for j in range(u):
+            cl = jax.tree.map(lambda a: a[r], cache["unit"][f"p{j}"])
+            out.append(gather(cl))
+    for key in sorted(cache["rest"], key=lambda s: int(s[1:])):
+        out.append(gather(cache["rest"][key]))
+    return out
 
 
 def init_paged_cache(cfg: ModelConfig, max_batch: int, cache_len: int,
@@ -360,7 +390,7 @@ def _scratch_base(pool_rows: int, max_batch: int) -> int:
 
 
 def paged_insert(cache, slot: int, src, pages: Sequence[int],
-                 src_slot: int = 0):
+                 src_slot: int = 0, skip_cols: int = 0):
     """Copy one request out of a batch-1 fixed-layout ``src`` (the output of
     ``prefill_cache`` / ``ChunkedPrefill.finish``) into the paged ``cache``.
 
@@ -369,6 +399,15 @@ def paged_insert(cache, slot: int, src, pages: Sequence[int],
     prompt_len + max_new_tokens)`` — since decode writes ride the block
     table; layers take their own prefix of the list, unassigned columns fall
     back to the slot's scratch page.
+
+    ``skip_cols``: the first ``skip_cols`` entries of ``pages`` are *shared*
+    prefix pages (refcounted, already holding exactly the content this
+    request would write) — the block table maps them but the K/V writes skip
+    them, so a shared page is never touched by a consumer.  A copy-on-write
+    tail page sits at column ``skip_cols`` itself: it is a *private* page
+    whose content rides in via ``src`` (gathered from the donor at admission),
+    so the normal write realises the copy.  Only meaningful under
+    :func:`prefix_sharing_supported` (uniform page geometry).
     """
     max_batch = cache["pos"].shape[0]
     out = {"unit": {}, "rest": {}}
@@ -385,6 +424,8 @@ def paged_insert(cache, slot: int, src, pages: Sequence[int],
             row += [scr] * (ncols - len(row))
             row = jnp.asarray(row, jnp.int32)
             S = ncols * pgtok
+            skip = min(int(skip_cols), ncols)
+            wrow = row[skip:]
             for name in ("k", "v"):
                 sl = s[name]
                 # (…, 1(b), S_src, kv, hd) -> page chunks at the table rows
@@ -397,9 +438,9 @@ def paged_insert(cache, slot: int, src, pages: Sequence[int],
                 chunks = sl.reshape(sl.shape[:-3]
                                     + (ncols, pgtok) + sl.shape[-2:])
                 if stacked:
-                    dst[name] = dst[name].at[:, row].set(chunks)
+                    dst[name] = dst[name].at[:, wrow].set(chunks[:, skip:])
                 else:
-                    dst[name] = dst[name].at[row].set(chunks)
+                    dst[name] = dst[name].at[wrow].set(chunks[skip:])
             dst["bt"] = (bt.at[:, slot].set(row) if stacked
                          else bt.at[slot].set(row))
             others = {k: v for k, v in dst.items()
@@ -793,20 +834,46 @@ class ChunkedPrefill:
     thread their states through.  SWA layers keep the carry *contiguous*
     during prefill (attention over the in-flight full-length K/V is exact,
     as in ``prefill_cache``); ``finish`` ring-folds into the cache layout.
+
+    Prefix sharing: ``start_token``/``prefix_kv`` seed the carry with the
+    first ``start_token`` tokens' K/V (gathered from shared pages via
+    :func:`gather_prefix_kv`), so ``step`` begins at the first uncached
+    token.  K/V at a given (token, absolute position) is deterministic, so
+    the finished cache matches an unseeded prefill of the whole prompt —
+    chunk boundaries never enter the math.  Callers keep
+    ``start_token < total``: the last prompt token must be prefilled live to
+    produce the logits that seed sampling.
     """
 
     def __init__(self, params, tokens, cache, cfg: ModelConfig, ctx: RunCtx,
-                 pattern: Optional[Sequence[str]] = None):
+                 pattern: Optional[Sequence[str]] = None,
+                 start_token: int = 0,
+                 prefix_kv: Optional[List[Any]] = None):
         self.params, self.cfg, self.ctx = params, cfg, ctx
         self.pattern = tuple(pattern) if pattern is not None else cfg.pattern
         self.tokens = tokens
         self.total = int(tokens.shape[1])
-        self.done_tokens = 0
+        self.start_token = int(start_token)
+        if not 0 <= self.start_token < max(self.total, 1):
+            raise ValueError(
+                f"start_token {start_token} outside [0, {self.total})")
+        self.done_tokens = self.start_token
         self._cache0 = cache
         self._sigs = layer_sigs(cfg)
         self._u, self._reps, self._rem = stack_plan(self._sigs)
         self._n_layers = self._u * self._reps + self._rem
         self._carry: List[Any] = [None] * self._n_layers
+        if self.start_token:
+            if prefix_kv is None or len(prefix_kv) != self._n_layers:
+                raise ValueError("start_token > 0 needs per-layer prefix_kv")
+            for li, st in enumerate(prefix_kv):
+                if st is None:
+                    raise ValueError(
+                        f"layer {li}: prefix sharing needs attention K/V "
+                        "for every layer (prefix_sharing_supported)")
+                self._carry[li] = {
+                    "k": st["k"].astype(ctx.compute_dtype),
+                    "v": st["v"].astype(ctx.compute_dtype)}
         self._logits = None
 
     @property

@@ -3,14 +3,15 @@ from repro.serve.control import (  # noqa: F401
     DEFAULT_CHUNK_GRID, ServeAction, ServeController,
 )
 from repro.serve.engine import (  # noqa: F401
-    DEADLINE, REQUEST_ARRIVAL, ContinuousBatchingServer, SlotRunner,
-    StaticBatchingServer, StepCostModel, measured_cost_model,
+    DEADLINE, REQUEST_ARRIVAL, ContinuousBatchingServer, PrefixSimRunner,
+    SlotRunner, StaticBatchingServer, StepCostModel, measured_cost_model,
+    resolve_decode_backend,
 )
 from repro.serve.metrics import (  # noqa: F401
     RequestRecord, RollingWindow, summarize,
 )
 from repro.serve.requests import (  # noqa: F401
-    BurstyRequestStream, Request, RequestStream,
+    BurstyRequestStream, Request, RequestStream, assign_templates,
 )
 from repro.serve.scheduler import (  # noqa: F401
     PRIORITIES, PRIORITY_DECODE_FIRST, PRIORITY_PREFILL_FIRST, Scheduler,

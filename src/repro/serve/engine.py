@@ -31,12 +31,14 @@ sweep arrival distributions this way).
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 from collections import deque
-from typing import Deque, Dict, List, Optional
+from typing import Any, Deque, Dict, List, Optional
 
 import numpy as np
 
+from repro.models.paging import PagePool, PrefixIndex
 from repro.obs.callbacks import SERVE_SUMMARY, serve_event
 from repro.obs.tracker import NOOP
 from repro.serve.metrics import RequestRecord, summarize
@@ -45,6 +47,34 @@ from repro.sim import EventQueue, SimClock
 
 REQUEST_ARRIVAL = "request_arrival"
 DEADLINE = "deadline"
+
+# escape hatch for the serving decode-backend autoflip (see
+# ``resolve_decode_backend``): "jax" forces the reference path, "pallas"
+# forces the kernel even where the autoflip would not pick it
+DECODE_BACKEND_ENV = "REPRO_DECODE_BACKEND"
+
+
+def resolve_decode_backend(ctx) -> str:
+    """Serving-path decode backend: flip to the pallas flash-decode kernel
+    wherever its numerics match the reference.
+
+    Interpret-mode autodetect active (off-TPU, ``kernel_interpret`` unset) or
+    interpret forced: the kernel runs under the pallas interpreter with
+    reference semantics — blessed, flip.  Compiled TPU numerics are *not*
+    yet blessed (ROADMAP: untested until a TPU run), so on-TPU the default
+    stays "jax".  An explicit ``RunCtx.decode_backend="pallas"`` or the
+    ``REPRO_DECODE_BACKEND`` env var always wins.
+    """
+    env = os.environ.get(DECODE_BACKEND_ENV, "").strip()
+    if env:
+        return env
+    if ctx.decode_backend != "jax":
+        return ctx.decode_backend       # explicit opt-in/out in the config
+    interp = ctx.kernel_interpret
+    if interp is None:
+        from repro.kernels.flash_decode import _interpret_default
+        interp = _interpret_default()
+    return "pallas" if interp else "jax"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -123,21 +153,42 @@ class SlotRunner:
     Owns the ``max_batch``-slot cache, the jitted fused prefill and decode
     step, per-slot next-token state, and the sampling chain.  Prompt tokens
     are synthesized per request id (each request gets its own fold of the
-    prompt key — requests are distinguishable but reproducible).
+    prompt key — requests are distinguishable but reproducible); a request
+    carrying a ``template`` draws its first ``prefix_len`` tokens from the
+    template's stream instead, so same-template requests share a real token
+    prefix.
+
+    Paged mode admission protocol (closes the admit/alloc race — multiple
+    in-flight prefill jobs used to double-count ``pool.available``):
+    ``can_admit`` *reserves* the request's new-page budget (and caches the
+    prefix-match plan), ``start_prefill`` hands out the seeded ChunkedPrefill
+    job, ``finish_prefill`` allocates against the reservation and inserts,
+    and ``cancel_prefill`` unwinds a job evicted mid-prefill.
+
+    ``prefix_sharing=True`` (paged mode, config permitting —
+    ``prefix_sharing_supported``) adds the vLLM-style prefix cache: finished
+    prompts donate their full pages to a :class:`PrefixIndex`, admissions
+    longest-prefix-match against it, matched pages are refcount-shared via
+    the block table (zero kernel changes: ``flash_decode_paged`` resolves
+    tables in-kernel), and the matched token span skips prefill entirely.
     """
 
     def __init__(self, params, cfg, ctx, max_batch: int, cache_len: int,
                  pattern=None, temperature: float = 0.0, seed: int = 0,
                  page_size: Optional[int] = None,
-                 num_pages: Optional[int] = None):
+                 num_pages: Optional[int] = None,
+                 prefix_sharing: bool = False):
         import jax
         import jax.numpy as jnp
 
-        from repro.models.decode import (PagePool, init_cache,
-                                         init_paged_cache, init_slot_cache,
-                                         decode_step, prefill_cache,
+        from repro.models.decode import (init_cache, init_paged_cache,
+                                         init_slot_cache, decode_step,
+                                         prefill_cache,
+                                         prefix_sharing_supported,
                                          slot_insert)
         self._jax, self._jnp = jax, jnp
+        ctx = dataclasses.replace(ctx,
+                                  decode_backend=resolve_decode_backend(ctx))
         self.cfg, self.ctx = cfg, ctx
         self.params = params
         self.max_batch, self.cache_len = max_batch, cache_len
@@ -146,6 +197,7 @@ class SlotRunner:
         # paged mode: K/V behind block tables, pages from a host PagePool
         # (slot_insert/slot_evict dispatch on the cache layout)
         self.page_size = page_size
+        self.prefix_index: Optional[PrefixIndex] = None
         if page_size is not None:
             if num_pages is None:
                 raise ValueError("paged runner needs num_pages")
@@ -154,11 +206,21 @@ class SlotRunner:
                                           num_pages=num_pages,
                                           pattern=pattern)
             self.pool: Optional[PagePool] = PagePool(num_pages)
+            if prefix_sharing:
+                pg = prefix_sharing_supported(cfg, cache_len, page_size,
+                                              pattern)
+                if pg is not None:
+                    self.prefix_index = PrefixIndex(pg)
         else:
             self.cache = init_slot_cache(cfg, max_batch, cache_len, ctx,
                                          pattern=pattern)
             self.pool = None
         self._slot_pages: Dict[int, List[int]] = {}
+        self._plans: Dict[int, Dict[str, Any]] = {}      # rid -> admit plan
+        self._inflight: Dict[int, Dict[str, Any]] = {}   # id(job) -> plan
+        self.prefill_tokens_skipped = 0
+        self.pages_asked = 0        # sum of pages_for over admissions
+        self.pages_alloc = 0        # newly allocated (non-shared) pages
         self._step = jax.jit(
             lambda p, c, t: decode_step(p, c, t, cfg, ctx, pattern=pattern))
         self._prefill = jax.jit(
@@ -175,6 +237,21 @@ class SlotRunner:
         self._slot_rid = [None] * max_batch
 
     def prompt_tokens(self, req: Request):
+        if req.template is not None and req.prefix_len > 0:
+            # shared-template prefix + per-request suffix; the template key
+            # lives in its own fold arm (a sentinel far above any real rid)
+            # so template ids never collide with request ids.  At least one
+            # suffix token keeps requests distinct.
+            npre = min(req.prefix_len, req.prompt_len - 1)
+            kp = self._jax.random.fold_in(
+                self._jax.random.fold_in(self._prompt_key, 0xFFFFFFFF),
+                req.template)
+            pre = self._jax.random.randint(
+                kp, (1, npre), 0, self.cfg.vocab_size)
+            ks = self._jax.random.fold_in(self._prompt_key, req.rid)
+            suf = self._jax.random.randint(
+                ks, (1, req.prompt_len - npre), 0, self.cfg.vocab_size)
+            return self._jnp.concatenate([pre, suf], axis=1)
         key = self._jax.random.fold_in(self._prompt_key, req.rid)
         return self._jax.random.randint(
             key, (1, req.prompt_len), 0, self.cfg.vocab_size)
@@ -195,11 +272,63 @@ class SlotRunner:
                             req.prompt_len + req.max_new_tokens,
                             self._pattern)
 
+    # -- admission plan: match + reserve at can_admit, consume at prefill ----
+
+    def _make_plan(self, req: Request) -> Optional[Dict[str, Any]]:
+        """Match the prompt against the prefix index and reserve the *new*
+        pages.  Shared full pages are increfed here — from this moment they
+        cannot be reclaimed out from under the admission.  Returns None (no
+        side effects survive) when the pool cannot cover the new pages even
+        after reclaiming index-only pages."""
+        total = self.pages_for(req)
+        tokens = self.prompt_tokens(req)
+        plan: Dict[str, Any] = {"req": req, "tokens": tokens, "host": None,
+                                "shared": [], "matched": 0, "tail_page": None,
+                                "new": total, "total": total}
+        if self.prefix_index is not None:
+            host = tuple(int(t) for t in np.asarray(tokens[0]))
+            m = self.prefix_index.match(host, limit=req.prompt_len - 1)
+            if m.pages:
+                self.pool.incref(m.pages)
+            plan.update(host=host, shared=list(m.pages), matched=m.tokens,
+                        tail_page=m.tail_page, new=total - m.n_pages)
+        short = plan["new"] - self.pool.available
+        if short > 0 and self.prefix_index is not None:
+            # index-only pages are reclaimable capacity: LRU-drop just enough
+            self.prefix_index.reclaim(short, self.pool)
+        if not self.pool.reserve(plan["new"]):
+            if plan["shared"]:
+                self.pool.free(plan["shared"])
+            return None
+        return plan
+
+    def _release_plan(self, plan: Dict[str, Any]) -> None:
+        self.pool.unreserve(plan["new"])
+        if plan["shared"]:
+            for p in self.pool.free(plan["shared"]):
+                self.prefix_index.invalidate_tail(p)
+
     def can_admit(self, req: Request) -> bool:
-        return self.pool is None or self.pages_for(req) <= self.pool.available
+        """Reserve ``req``'s new-page budget (True) or report page pressure
+        (False).  A True here *must* be followed by ``start_prefill`` — the
+        reservation and any shared-page refs are parked in the plan cache."""
+        if self.pool is None:
+            return True
+        stale = self._plans.pop(req.rid, None)
+        if stale is not None:       # re-check after a failed earlier pass
+            self._release_plan(stale)
+        plan = self._make_plan(req)
+        if plan is None:
+            return False
+        self._plans[req.rid] = plan
+        return True
 
     def admit(self, slot: int, req: Request) -> None:
-        """Fused prefill + slot insert; samples the request's first token."""
+        """Fused prefill + slot insert; samples the request's first token.
+
+        The legacy whole-prompt path (ContinuousBatchingServer): no
+        reservation protocol, no prefix sharing — allocation happens inline
+        and exhaustion raises."""
         logits, src = self._prefill(self.params, self._init_one(),
                                     self.prompt_tokens(req))
         self._insert_slot(slot, req, logits, src)
@@ -207,26 +336,72 @@ class SlotRunner:
     def start_prefill(self, req: Request):
         """A ChunkedPrefill job for ``req`` — the scheduler advances it with
         ``job.step(n)`` between decode steps and lands it via
-        :meth:`finish_prefill`."""
-        from repro.models.decode import ChunkedPrefill
-        return ChunkedPrefill(self.params, self.prompt_tokens(req),
-                              self._init_one(), self.cfg, self.ctx,
-                              pattern=self._pattern)
+        :meth:`finish_prefill`.  With a prefix-index hit the job starts at
+        the first uncached token: the matched span's K/V is gathered off the
+        shared pages into the job's carry (the gather of the partial tail
+        page *is* the copy-on-write copy — it lands in a private page at
+        insert)."""
+        from repro.models.decode import ChunkedPrefill, gather_prefix_kv
+        plan = self._plans.pop(req.rid, None)
+        if plan is None and self.pool is not None:
+            plan = self._make_plan(req)
+            if plan is None:
+                raise RuntimeError(
+                    f"page pool exhausted admitting rid={req.rid} "
+                    f"(available={self.pool.available})")
+        tokens = plan["tokens"] if plan is not None \
+            else self.prompt_tokens(req)
+        matched = plan["matched"] if plan is not None else 0
+        prefix_kv = None
+        if matched:
+            rows = list(plan["shared"])
+            if plan["tail_page"] is not None:
+                rows.append(plan["tail_page"])
+            prefix_kv = gather_prefix_kv(self.cache, rows, matched)
+            self.prefill_tokens_skipped += matched
+        job = ChunkedPrefill(self.params, tokens, self._init_one(),
+                             self.cfg, self.ctx, pattern=self._pattern,
+                             start_token=matched, prefix_kv=prefix_kv)
+        if plan is not None:
+            self._inflight[id(job)] = plan
+        return job
 
     def finish_prefill(self, slot: int, req: Request, job) -> None:
         """Insert a completed ChunkedPrefill job into ``slot``."""
         logits, src = job.finish()
-        self._insert_slot(slot, req, logits, src)
+        self._insert_slot(slot, req, logits, src,
+                          plan=self._inflight.pop(id(job), None))
 
-    def _insert_slot(self, slot: int, req: Request, logits, src) -> None:
+    def cancel_prefill(self, job) -> None:
+        """Unwind a job evicted mid-prefill: return its page reservation and
+        drop its shared-page refs (never freeing a page another slot or the
+        index still holds)."""
+        plan = self._inflight.pop(id(job), None)
+        if plan is not None:
+            self._release_plan(plan)
+
+    def _insert_slot(self, slot: int, req: Request, logits, src,
+                     plan: Optional[Dict[str, Any]] = None) -> None:
         if self.pool is not None:
-            pages = self.pool.alloc(self.pages_for(req))
-            if pages is None:
+            if plan is not None:
+                new = self.pool.alloc(plan["new"], reserved=True)
+            else:               # legacy admit() path: inline allocation
+                new = self.pool.alloc(self.pages_for(req))
+            if new is None:
                 raise RuntimeError(
                     f"page pool exhausted admitting rid={req.rid} "
                     f"(available={self.pool.available})")
+            shared = plan["shared"] if plan is not None else []
+            pages = shared + new
             self._slot_pages[slot] = pages
-            self.cache = self._insert(self.cache, slot, src, pages=pages)
+            self.cache = self._insert(self.cache, slot, src, pages=pages,
+                                      skip_cols=len(shared))
+            self.pages_asked += len(pages)
+            self.pages_alloc += len(new)
+            if self.prefix_index is not None and plan is not None:
+                # donate: register this prompt's full pages (index increfs
+                # the new ones) and its partial tail as a CoW source
+                self.prefix_index.insert(plan["host"], pages, self.pool)
         else:
             self.cache = self._insert(self.cache, slot, src)
         first = int(self._sample(logits)[0])
@@ -254,7 +429,171 @@ class SlotRunner:
             # and must not scatter into pages another request may get next
             from repro.models.decode import paged_evict
             self.cache = paged_evict(self.cache, slot)
-            self.pool.free(self._slot_pages.pop(slot))
+            released = self.pool.free(self._slot_pages.pop(slot))
+            if self.prefix_index is not None:
+                # recycled pages can no longer back a CoW tail lookup
+                for p in released:
+                    self.prefix_index.invalidate_tail(p)
+
+    def share_stats(self) -> Optional[Dict[str, Any]]:
+        """Prefix-sharing counters for the run summary (None if sharing is
+        off)."""
+        if self.prefix_index is None:
+            return None
+        st = self.prefix_index.stats()
+        st["prefill_tokens_skipped"] = self.prefill_tokens_skipped
+        st["pages_asked"] = self.pages_asked
+        st["pages_alloc"] = self.pages_alloc
+        st["pages_saved"] = self.pages_asked - self.pages_alloc
+        return st
+
+
+class _SimPrefillJob:
+    """Pure-bookkeeping stand-in for ChunkedPrefill in sim-only lanes."""
+
+    __slots__ = ("total", "done_tokens")
+
+    def __init__(self, total: int, start: int = 0):
+        self.total = int(total)
+        self.done_tokens = int(start)
+
+    def step(self, n: int) -> int:
+        take = min(int(n), self.total - self.done_tokens)
+        self.done_tokens += take
+        return take
+
+    @property
+    def done(self) -> bool:
+        return self.done_tokens >= self.total
+
+
+class PrefixSimRunner:
+    """Page accounting without execution: the sim-side mirror of a paged
+    :class:`SlotRunner`.
+
+    The pure-sim :class:`~repro.serve.scheduler.Scheduler` lanes (runner =
+    None) have no page pressure, so prefix sharing has nothing to win there.
+    This runner carries the *allocator* — :class:`PagePool`,
+    :class:`PrefixIndex`, the reserve/alloc/cancel admission protocol, and
+    prefill-skip (jobs start past the matched span) — into the deterministic
+    benchmark without touching jax: prompt tokens are synthetic hashables
+    (``("T", template, i)`` for the shared span, ``("R", rid, j)`` for the
+    suffix), and pages hold no data.  Same code path shape, same counters,
+    so ``benchmarks/serving_scale.py`` can price sharing-on vs sharing-off at
+    equal ``num_pages`` on a Zipf template trace.
+    """
+
+    def __init__(self, max_batch: int, cache_len: int, page_size: int,
+                 num_pages: int, prefix_sharing: bool = True):
+        self.max_batch = int(max_batch)
+        self.cache_len = int(cache_len)
+        self.page_size = int(page_size)
+        self.pool = PagePool(num_pages)
+        self.prefix_index = (PrefixIndex(self.page_size)
+                             if prefix_sharing else None)
+        self._plans: Dict[int, Dict[str, Any]] = {}
+        self._inflight: Dict[int, Dict[str, Any]] = {}
+        self._slot_pages: Dict[int, List[int]] = {}
+        self.prefill_tokens_skipped = 0
+        self.pages_asked = 0
+        self.pages_alloc = 0
+
+    def _tokens(self, req: Request) -> tuple:
+        npre = (min(req.prefix_len, req.prompt_len - 1)
+                if req.template is not None else 0)
+        return (tuple(("T", req.template, i) for i in range(npre))
+                + tuple(("R", req.rid, j)
+                        for j in range(req.prompt_len - npre)))
+
+    def pages_for(self, req: Request) -> int:
+        n = min(req.prompt_len + req.max_new_tokens, self.cache_len)
+        return -(-n // self.page_size)
+
+    def _make_plan(self, req: Request) -> Optional[Dict[str, Any]]:
+        total = self.pages_for(req)
+        plan: Dict[str, Any] = {"host": self._tokens(req), "shared": [],
+                                "matched": 0, "new": total}
+        if self.prefix_index is not None:
+            m = self.prefix_index.match(plan["host"],
+                                        limit=req.prompt_len - 1)
+            if m.pages:
+                self.pool.incref(m.pages)
+            plan.update(shared=list(m.pages), matched=m.tokens,
+                        new=total - m.n_pages)
+        short = plan["new"] - self.pool.available
+        if short > 0 and self.prefix_index is not None:
+            self.prefix_index.reclaim(short, self.pool)
+        if not self.pool.reserve(plan["new"]):
+            if plan["shared"]:
+                self.pool.free(plan["shared"])
+            return None
+        return plan
+
+    def can_admit(self, req: Request) -> bool:
+        stale = self._plans.pop(req.rid, None)
+        if stale is not None:
+            self._release_plan(stale)
+        plan = self._make_plan(req)
+        if plan is None:
+            return False
+        self._plans[req.rid] = plan
+        return True
+
+    def _release_plan(self, plan: Dict[str, Any]) -> None:
+        self.pool.unreserve(plan["new"])
+        if plan["shared"]:
+            for p in self.pool.free(plan["shared"]):
+                if self.prefix_index is not None:
+                    self.prefix_index.invalidate_tail(p)
+
+    def start_prefill(self, req: Request):
+        plan = self._plans.pop(req.rid, None)
+        if plan is None:
+            plan = self._make_plan(req)
+            if plan is None:
+                raise RuntimeError(
+                    f"page pool exhausted admitting rid={req.rid}")
+        self.prefill_tokens_skipped += plan["matched"]
+        job = _SimPrefillJob(req.prompt_len, start=plan["matched"])
+        self._inflight[id(job)] = plan
+        return job
+
+    def finish_prefill(self, slot: int, req: Request, job) -> None:
+        plan = self._inflight.pop(id(job))
+        new = self.pool.alloc(plan["new"], reserved=True)
+        if new is None:
+            raise RuntimeError(
+                f"page pool exhausted admitting rid={req.rid}")
+        pages = plan["shared"] + new
+        self._slot_pages[slot] = pages
+        self.pages_asked += len(pages)
+        self.pages_alloc += len(new)
+        if self.prefix_index is not None:
+            self.prefix_index.insert(plan["host"], pages, self.pool)
+
+    def cancel_prefill(self, job) -> None:
+        plan = self._inflight.pop(id(job), None)
+        if plan is not None:
+            self._release_plan(plan)
+
+    def step(self, active_slots: List[int]) -> None:
+        pass                        # no execution — the clock does the work
+
+    def release(self, slot: int) -> None:
+        released = self.pool.free(self._slot_pages.pop(slot))
+        if self.prefix_index is not None:
+            for p in released:
+                self.prefix_index.invalidate_tail(p)
+
+    def share_stats(self) -> Optional[Dict[str, Any]]:
+        if self.prefix_index is None:
+            return None
+        st = self.prefix_index.stats()
+        st["prefill_tokens_skipped"] = self.prefill_tokens_skipped
+        st["pages_asked"] = self.pages_asked
+        st["pages_alloc"] = self.pages_alloc
+        st["pages_saved"] = self.pages_asked - self.pages_alloc
+        return st
 
 
 def _with_vec_pos(cache, jnp):

@@ -24,6 +24,30 @@ import numpy as np
 from repro.core.streams import TABLE_I, StreamDist
 
 
+def assign_templates(reqs: List["Request"], n_templates: int,
+                     prefix_len: int, zipf_s: float = 1.1,
+                     seed: int = 0) -> List["Request"]:
+    """Tag requests with Zipf-reused shared-prefix templates.
+
+    Template popularity follows a normalised Zipf law (rank ``k`` drawn with
+    probability ∝ ``k^-zipf_s``) — the few-hot-system-prompts shape of
+    production traffic.  Draws come from their own PRNG stream, so decorating
+    a trace never perturbs the arrival process that generated it (the legacy
+    RNG draw sequences stay byte-identical).
+    """
+    if n_templates <= 0 or prefix_len <= 0 or not reqs:
+        return reqs
+    rng = np.random.default_rng((seed, 0x7E3F))
+    ranks = np.arange(1, n_templates + 1, dtype=np.float64)
+    probs = ranks ** -float(zipf_s)
+    probs /= probs.sum()
+    draws = rng.choice(n_templates, size=len(reqs), p=probs)
+    return [dataclasses.replace(
+        r, template=int(draws[i]),
+        prefix_len=min(int(prefix_len), max(r.prompt_len - 1, 0)))
+        for i, r in enumerate(reqs)]
+
+
 @dataclasses.dataclass(frozen=True)
 class Request:
     """One generation request in sim time.
@@ -39,6 +63,12 @@ class Request:
     deadline_s: float
     slo_ttft_s: float = float("inf")
     client: int = 0
+    # shared-prefix trace mode: requests with the same ``template`` open with
+    # the same ``prefix_len`` prompt tokens (system prompt / few-shot header),
+    # so a prefix-sharing runner can dedupe their KV pages.  ``None`` =
+    # fully unique prompt (the legacy trace).
+    template: Optional[int] = None
+    prefix_len: int = 0
 
 
 @dataclasses.dataclass
@@ -63,6 +93,14 @@ class RequestStream:
     # the fixed-length stream — and its exact RNG draw sequence, which the
     # perf-gate baselines pin.
     prompt_lens: Optional[Sequence[int]] = None
+    # shared-prefix trace mode (``assign_templates``): n_templates > 0 tags
+    # each request with a Zipf-reused template whose first
+    # ``template_prefix_len`` prompt tokens are shared.  Off (0) by default;
+    # drawn from a separate PRNG stream, so the arrival trace — and the
+    # pinned legacy draw sequences — are unchanged either way.
+    n_templates: int = 0
+    template_prefix_len: int = 0
+    template_zipf: float = 1.1
 
     def __post_init__(self):
         if isinstance(self.dist, str):
@@ -105,7 +143,10 @@ class RequestStream:
                         slo_ttft_s=self.slo_ttft_s, client=c))
                     t += plen / float(rates[c])    # gather time of this prompt
         reqs.sort(key=lambda r: r.arrival_s)
-        return [dataclasses.replace(r, rid=i) for i, r in enumerate(reqs)]
+        reqs = [dataclasses.replace(r, rid=i) for i, r in enumerate(reqs)]
+        return assign_templates(reqs, self.n_templates,
+                                self.template_prefix_len,
+                                self.template_zipf, self.seed)
 
 
 @dataclasses.dataclass
@@ -129,6 +170,11 @@ class BurstyRequestStream:
     slo_ttft_s: float = 0.75
     slo_tpot_s: float = 0.05
     seed: int = 0
+    # shared-prefix trace mode, as in RequestStream (separate PRNG stream;
+    # the thinned Poisson arrival draws are untouched)
+    n_templates: int = 0
+    template_prefix_len: int = 0
+    template_zipf: float = 1.1
 
     def rate_at(self, t: float) -> float:
         in_burst = (t % self.burst_every_s) < self.burst_len_s
@@ -155,4 +201,6 @@ class BurstyRequestStream:
                 max_new_tokens=self.max_new_tokens,
                 deadline_s=self.deadline_for(t),
                 slo_ttft_s=self.slo_ttft_s, client=0))
-        return reqs
+        return assign_templates(reqs, self.n_templates,
+                                self.template_prefix_len,
+                                self.template_zipf, self.seed)

@@ -54,7 +54,10 @@ class _PrefillJob:
     def __init__(self, req: Request, slot: int, handle=None):
         self.req = req
         self.slot = slot
-        self.done = 0               # prompt tokens prefilled so far
+        # prompt tokens prefilled so far — a prefix-sharing runner hands out
+        # jobs already advanced past the matched span (done_tokens > 0), so
+        # the sim charges chunk time only for the tokens actually computed
+        self.done = getattr(handle, "done_tokens", 0)
         self.handle = handle        # SlotRunner ChunkedPrefill job, if real
 
     @property
@@ -181,8 +184,29 @@ class Scheduler(_ServerBase):
         summary["chunk_tokens"] = self._chunk_tokens
         summary["priority"] = self._priority
         summary["active_runners"] = self._active_runners
+        share = self._share_stats()
+        if share is not None:
+            summary["prefix_sharing"] = share
         self._log_summary(summary)
         return list(recs.values()), summary
+
+    def _share_stats(self):
+        """Fold per-lane prefix-sharing counters into one scorecard (None
+        when no lane runs a sharing-enabled runner — legacy summaries are
+        unchanged)."""
+        per_lane = [s for s in
+                    (lane.runner.share_stats() for lane in self.lanes
+                     if lane.runner is not None
+                     and hasattr(lane.runner, "share_stats"))
+                    if s is not None]
+        if not per_lane:
+            return None
+        agg = {k: sum(s[k] for s in per_lane) for k in per_lane[0]}
+        agg["prefix_hit_rate"] = (agg["hits"] / agg["lookups"]
+                                  if agg["lookups"] else 0.0)
+        agg["pages_saved_frac"] = (agg["pages_saved"] / agg["pages_asked"]
+                                   if agg["pages_asked"] else 0.0)
+        return agg
 
     def _conservation_ok(self, recs) -> bool:
         """Every request reached exactly one terminal state."""
@@ -375,6 +399,10 @@ class Scheduler(_ServerBase):
                 if job.req.rid == rid:
                     lane.jobs.remove(job)
                     lane.free.append(job.slot)
+                    if lane.runner is not None:
+                        # unwind the admission-time page reservation and any
+                        # shared-page refs this job holds
+                        lane.runner.cancel_prefill(job.handle)
                     rec.dropped = "slo_miss"
                     self._mark_terminal(rid, now)
                     if self.tracker.active:

@@ -15,10 +15,12 @@ from repro.models.decode import (ChunkedPrefill, PagePool, decode_step,  # noqa:
                                  init_cache, init_paged_cache,
                                  init_slot_cache, pages_needed,
                                  prefill_cache, slot_evict, slot_insert)
+from repro.models.paging import PrefixIndex, page_keys  # noqa: E402
 from repro.obs import SERVE_EVENT, MemoryTracker  # noqa: E402
 from repro.serve import (BurstyRequestStream, ContinuousBatchingServer,  # noqa: E402
-                         PRIORITIES, Request, RequestStream, Scheduler,
-                         ServeController, SlotRunner, StepCostModel)
+                         PRIORITIES, PrefixSimRunner, Request, RequestStream,
+                         Scheduler, ServeController, SlotRunner,
+                         StepCostModel, resolve_decode_backend)
 from repro.serve.metrics import RollingWindow  # noqa: E402
 
 CTX = RunCtx(remat=False, chunk_q=8, chunk_k=8, loss_chunk=8)
@@ -371,3 +373,241 @@ def test_request_stream_mixed_lengths():
     again = RequestStream(dist="S2", n_clients=4, prompt_lens=(16, 256),
                           max_new_tokens=8, seed=0).generate(5.0)
     assert [r.prompt_len for r in reqs] == [r.prompt_len for r in again]
+
+
+# ---------------------------------------------------------------------------
+# prefix sharing: refcounted pool, CoW tails, prefix-aware admission
+
+
+def _req(rid, prompt_len=16, max_new=8, template=None, prefix_len=0):
+    return Request(rid=rid, arrival_s=0.0, prompt_len=prompt_len,
+                   max_new_tokens=max_new, deadline_s=100.0, slo_ttft_s=100.0,
+                   template=template, prefix_len=prefix_len)
+
+
+def _shared_trace(horizon=3.0, seed=0):
+    return RequestStream(dist="S1", n_clients=4, prompt_len=24,
+                         max_new_tokens=6, slo_ttft_s=2.0, slo_tpot_s=0.5,
+                         seed=seed, n_templates=2,
+                         template_prefix_len=16).generate(horizon)
+
+
+def test_page_pool_refcounts_shared_page():
+    """A shared page survives its first free and recycles on the last; a
+    third free is a double free."""
+    pool = PagePool(4)
+    pages = pool.alloc(2)
+    pool.incref([pages[0]])                 # a second request maps page 0
+    assert pool.refcount(pages[0]) == 2
+    released = pool.free(pages)             # first mapper lets go of both
+    assert released == [pages[1]]           # page 0 still shared
+    assert pool.refcount(pages[0]) == 1 and pool.in_use() == 1
+    assert pool.free([pages[0]]) == [pages[0]]
+    with pytest.raises(ValueError, match="double free"):
+        pool.free([pages[0]])
+    assert pool.conserved()
+
+
+def test_page_pool_reservation_blocks_oversubscription():
+    """Reservations draw down ``available`` so overlapping admissions can
+    no longer both pass on the same free pages (the admit/alloc race)."""
+    pool = PagePool(4)
+    assert pool.reserve(3)
+    assert not pool.reserve(2)              # only 1 unreserved page left
+    assert pool.alloc(2) is None            # unreserved alloc sees 1 page
+    with pytest.raises(ValueError, match="without reservation"):
+        pool.alloc(4, reserved=True)
+    got = pool.alloc(3, reserved=True)      # consumes the reservation
+    assert len(got) == 3 and pool.reserved == 0
+    pool.unreserve(0)
+    assert pool.conserved()
+
+
+def test_prefix_index_match_and_cow_tail():
+    """Full pages match by hash chain; the partial tail matches by content
+    until invalidated (the donor's first decode write)."""
+    pool = PagePool(8)
+    idx = PrefixIndex(4)
+    toks = tuple(range(10))                 # 2 full pages + 2-token tail
+    pages = pool.alloc(3)
+    idx.insert(toks, pages, pool)
+    assert [pool.refcount(p) for p in pages] == [2, 2, 1]   # tail: no ref
+    m = idx.match(toks + (99, 98))          # same prefix, longer prompt
+    assert m.pages == pages[:2] and m.tail_page == pages[2]
+    assert m.tail_tokens == 2 and m.tokens == 10
+    # diverging inside page 1 keeps only page 0
+    m2 = idx.match((0, 1, 2, 3, 7, 7, 7, 7, 8, 9))
+    assert m2.pages == pages[:1] and m2.tail_page is None
+    # the limit clamp trims the tail first, then whole pages
+    m3 = idx.match(toks, limit=9)
+    assert m3.tokens == 9 and m3.tail_tokens == 1
+    m4 = idx.match(toks, limit=6)
+    assert m4.pages == pages[:1] and m4.tokens == 4
+    idx.invalidate_tail(pages[2])
+    m5 = idx.match(toks)
+    assert m5.tail_page is None and m5.tokens == 8
+    assert page_keys(toks, 4) == page_keys(toks + (99,), 4)
+
+
+def test_prefix_index_reclaim_lru_leaf_first():
+    """Under pool pressure the index releases cold leaves first, never a
+    page a live request still maps."""
+    pool = PagePool(8)
+    idx = PrefixIndex(4)
+    a = pool.alloc(2)
+    idx.insert(tuple(range(8)), a, pool)
+    b = pool.alloc(2)
+    idx.insert(tuple(range(100, 108)), b, pool)
+    pool.free(a), pool.free(b)              # donors gone: index-only pages
+    idx.match(tuple(range(8)))              # chain A is warm
+    assert idx.reclaimable(pool) == 4
+    assert idx.reclaim(1, pool) == 1
+    assert pool.refcount(b[1]) == 0         # cold leaf went first
+    assert pool.refcount(a[1]) == 1
+    # page a[0] pinned by a live mapper is never reclaimed
+    pool.incref([a[0]])
+    idx.reclaim(10, pool)
+    assert pool.refcount(a[0]) == 2 and idx.n_pages == 1
+    assert pool.conserved()
+
+
+def test_admission_reserves_pages_regression():
+    """Two overlapping admissions can no longer double-count the free
+    list: the second ``can_admit`` sees the first one's reservation."""
+    cfg = _cfg("qwen2-0.5b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    runner = SlotRunner(params, cfg, CTX, 2, 32, page_size=8, num_pages=4)
+    r1, r2 = _req(1, 16, 8), _req(2, 16, 8)     # 3 pages each, pool of 4
+    assert runner.can_admit(r1)
+    assert runner.pool.reserved == 3
+    assert not runner.can_admit(r2)             # would have passed pre-fix
+    job = runner.start_prefill(r1)
+    while not job.done:
+        job.step(8)
+    runner.finish_prefill(0, r1, job)
+    assert runner.pool.reserved == 0 and runner.pool.in_use() == 3
+    assert not runner.can_admit(r2)
+    runner.release(0)
+    assert runner.can_admit(r2) and runner.pool.conserved()
+
+
+def test_cancel_prefill_unwinds_shared_refs():
+    """Evicting a job mid-prefill returns its reservation and drops its
+    shared-page refs without freeing pages the index still holds."""
+    cfg = _cfg("qwen2-0.5b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    runner = SlotRunner(params, cfg, CTX, 2, 48, page_size=8, num_pages=12,
+                        prefix_sharing=True)
+    assert runner.prefix_index is not None
+    donor = _req(1, 24, 6, template=0, prefix_len=16)
+    assert runner.can_admit(donor)
+    job = runner.start_prefill(donor)
+    while not job.done:
+        job.step(8)
+    runner.finish_prefill(0, donor, job)        # donates 2 full prefix pages
+    held = sorted(runner.prefix_index.held_pages())
+    base = [runner.pool.refcount(p) for p in held]
+    consumer = _req(2, 24, 6, template=0, prefix_len=16)
+    assert runner.can_admit(consumer)
+    assert sum(runner.pool.refcount(p) for p in held) > sum(base)  # increfed
+    job2 = runner.start_prefill(consumer)
+    assert job2.done_tokens > 0                 # prefill skipped the match
+    runner.cancel_prefill(job2)                 # mid-prefill eviction
+    assert runner.pool.reserved == 0
+    assert [runner.pool.refcount(p) for p in held] == base
+    assert all(runner.pool.refcount(p) >= 1 for p in held)
+    runner.release(0)
+    assert runner.pool.conserved()
+    assert sorted(runner.prefix_index.held_pages()) == held
+
+
+@pytest.mark.parametrize("arch", ["qwen2-0.5b", "mixtral-8x22b"])
+def test_prefix_sharing_generation_bit_exact(arch):
+    """Sharing-on and sharing-off paged runners emit identical token
+    streams on a Zipf template trace — through donation, CoW tail gathers,
+    evict -> recycle -> re-admit.  The SWA-ring family must gate sharing
+    off entirely (ring pages rewrap during decode) and still match."""
+    cfg = _cfg(arch)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    reqs = _shared_trace()
+    cost = StepCostModel(decode_step_s=0.01, prefill_token_s=5e-4,
+                         prefill_base_s=1e-3)
+
+    def run(sharing):
+        runner = SlotRunner(params, cfg, CTX, 2, 48, page_size=8,
+                            num_pages=12, prefix_sharing=sharing)
+        _, s = Scheduler(2, cost, runners=[runner],
+                         chunk_tokens=8).run(reqs, horizon_s=3.0)
+        assert s["conservation_ok"] and runner.pool.conserved()
+        return runner, s
+
+    off_runner, _ = run(False)
+    on_runner, s_on = run(True)
+    assert off_runner.generated.keys() == on_runner.generated.keys()
+    assert len(on_runner.generated) > 0
+    for rid in off_runner.generated:
+        assert off_runner.generated[rid] == on_runner.generated[rid], \
+            f"rid {rid} diverged under prefix sharing"
+    if arch == "qwen2-0.5b":                # dense: sharing active and used
+        share = s_on["prefix_sharing"]
+        assert share["hits"] > 0 and share["pages_saved"] > 0
+        assert share["prefill_tokens_skipped"] > 0
+    else:                                   # SWA ring: gated off, zero hits
+        assert on_runner.prefix_index is None
+        assert "prefix_sharing" not in s_on
+
+
+def test_shared_prefix_sim_cell_wins():
+    """The pure-sim Zipf cell: sharing-on admits and serves strictly more
+    than sharing-off at equal ``num_pages``, with conserved pools."""
+    reqs = RequestStream(dist="S2", n_clients=8, prompt_len=64,
+                         max_new_tokens=8, slo_ttft_s=0.5, slo_tpot_s=0.05,
+                         seed=0, n_templates=2,
+                         template_prefix_len=48).generate(4.0)
+    out = {}
+    for mode in (False, True):
+        runner = PrefixSimRunner(8, 80, 8, 24, prefix_sharing=mode)
+        _, s = Scheduler(8, COST, runners=[runner],
+                         chunk_tokens=16).run(reqs, horizon_s=4.0)
+        assert s["conservation_ok"] and runner.pool.conserved()
+        out[mode] = s
+    assert out[True]["goodput_tok_s"] >= out[False]["goodput_tok_s"]
+    share = out[True]["prefix_sharing"]
+    assert share["prefix_hit_rate"] > 0 and share["pages_saved_frac"] > 0
+    assert "prefix_sharing" not in out[False]
+
+
+def test_decode_backend_autoflip(monkeypatch):
+    """Off-TPU (interpret autodetect) the serving path flips to pallas
+    flash-decode; the env var and an explicit backend both override; and
+    the flipped runner's tokens match a forced-jax runner bit-for-bit."""
+    monkeypatch.delenv("REPRO_DECODE_BACKEND", raising=False)
+    assert resolve_decode_backend(CTX) == "pallas"      # no TPU in CI
+    explicit = dataclasses.replace(CTX, decode_backend="jax_paged")
+    assert resolve_decode_backend(explicit) == "jax_paged"
+    monkeypatch.setenv("REPRO_DECODE_BACKEND", "jax")
+    assert resolve_decode_backend(CTX) == "jax"
+
+    cfg = _cfg("qwen2-0.5b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    reqs = RequestStream(dist="S1", n_clients=3, prompt_lens=(8, 16),
+                         max_new_tokens=6, slo_ttft_s=2.0, slo_tpot_s=0.5,
+                         seed=0).generate(2.0)
+    cost = StepCostModel(decode_step_s=0.01, prefill_token_s=5e-4,
+                         prefill_base_s=1e-3)
+
+    def run():
+        runner = SlotRunner(params, cfg, CTX, 2, 32, page_size=8,
+                            num_pages=8)
+        _, s = Scheduler(2, cost, runners=[runner],
+                         chunk_tokens=8).run(reqs, horizon_s=2.0)
+        assert s["conservation_ok"]
+        return runner.ctx.decode_backend, runner.generated
+
+    backend_jax, gen_jax = run()
+    monkeypatch.delenv("REPRO_DECODE_BACKEND")
+    backend_pallas, gen_pallas = run()
+    assert backend_jax == "jax" and backend_pallas == "pallas"
+    assert gen_jax.keys() == gen_pallas.keys() and len(gen_jax) > 0
+    for rid in gen_jax:
+        assert gen_jax[rid] == gen_pallas[rid], f"rid {rid} diverged"
